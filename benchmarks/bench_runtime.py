@@ -1,0 +1,62 @@
+"""Micro-benchmarks of the framework's own moving parts: simulator
+throughput, governor event ingestion, kernel interpret-mode sanity, and the
+instrumentation overhead of the artificial barrier (paper §4.2 claim:
+negligible)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import baseline_trace, emit, time_call
+from repro.core.governor import Governor
+from repro.core.policies import ALL_POLICIES, BASELINE, COUNTDOWN_SLACK
+from repro.core.simulator import simulate
+from repro.core.workloads import APPS, generate
+
+
+def run(full: bool = False) -> dict:
+    out = {}
+
+    # simulator throughput (rank-task events / s)
+    wl, _, _ = baseline_trace("nas_is.D.128")
+    us, _ = time_call(lambda: simulate(wl, COUNTDOWN_SLACK)[0], repeats=2)
+    events = wl.n_tasks * wl.n_ranks
+    out["sim_events_per_s"] = events / (us / 1e6)
+    emit("bench/simulator", us, f"events_per_s={out['sim_events_per_s']:.0f}")
+
+    # governor ingestion rate
+    gov = Governor()
+    n_calls, n_ranks = 2000, 16
+    t0 = time.perf_counter()
+    for c in range(n_calls):
+        for r in range(n_ranks):
+            gov.sink(r, "barrier_enter", c, c * 1e-3)
+            gov.sink(r, "barrier_exit", c, c * 1e-3 + 5e-4)
+            gov.sink(r, "copy_exit", c, c * 1e-3 + 7e-4)
+    dt = time.perf_counter() - t0
+    rep = gov.finalize()
+    out["governor_events_per_s"] = 3 * n_calls * n_ranks / dt
+    emit("bench/governor", dt * 1e6, f"events_per_s={out['governor_events_per_s']:.0f}")
+
+    # artificial-barrier cost inside the simulator (paper: negligible)
+    base, _ = simulate(wl, BASELINE)
+    res, _ = simulate(wl, ALL_POLICIES["cntd_slack"])
+    out["barrier_overhead_pct"] = res.overhead_vs(base)
+    emit("bench/barrier_overhead", 0.0, out["barrier_overhead_pct"])
+
+    if full:
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        x = jnp.ones((64, 256), jnp.float32)
+        sc = jnp.ones((256,), jnp.float32)
+        ops.rmsnorm(x, sc).block_until_ready()
+        us, _ = time_call(lambda: ops.rmsnorm(x, sc).block_until_ready(), repeats=3)
+        emit("bench/rmsnorm_interpret", us, "interpret-mode (CPU)")
+    return out
+
+
+if __name__ == "__main__":
+    run(full=True)

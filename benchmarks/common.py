@@ -1,0 +1,53 @@
+"""Shared benchmark utilities: timing, CSV output, workload/trace caching."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+os.makedirs(ART, exist_ok=True)
+
+_TRACE_CACHE: Dict[Tuple[str, int], Any] = {}
+
+
+def baseline_trace(app: str, seed: int = 0):
+    """(workload, baseline SimResult, TraceRecord) — cached per process."""
+    from repro.core.policies import BASELINE
+    from repro.core.simulator import simulate
+    from repro.core.workloads import APPS, generate
+
+    key = (app, seed)
+    if key not in _TRACE_CACHE:
+        wl = generate(APPS[app], seed=seed)
+        res, trace = simulate(wl, BASELINE, collect_trace=True)
+        _TRACE_CACHE[key] = (wl, res, trace)
+    return _TRACE_CACHE[key]
+
+
+def time_call(fn: Callable[[], Any], repeats: int = 3) -> Tuple[float, Any]:
+    """(best microseconds per call, last result)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best, out
+
+
+def emit(name: str, us_per_call: float, derived: Any) -> None:
+    """The harness contract: ``name,us_per_call,derived`` CSV on stdout."""
+    if isinstance(derived, float):
+        derived = f"{derived:.4f}"
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def save_json(name: str, payload: Any) -> str:
+    path = os.path.join(ART, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path

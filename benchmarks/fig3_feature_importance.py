@@ -1,0 +1,42 @@
+"""Paper Fig. 3: permutation feature importance of the RF duration models
+(averaged over applications, normalized to [0,1] per target)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import baseline_trace, emit, save_json, time_call
+from repro.core.predictor import FEATURES_BASE, FEATURES_PREV, evaluate_predictability
+
+APPS_FIG3 = ["nas_is.D.128", "nas_mg.E.128", "nas_ft.E.1024", "omen_1056p"]
+
+
+def run(full: bool = False) -> dict:
+    feats = FEATURES_BASE + FEATURES_PREV
+    acc = {t: {f: [] for f in feats} for t in ("tcomp", "tslack", "tcopy")}
+    for app in APPS_FIG3:
+        _, _, trace = baseline_trace(app)
+        us, res = time_call(
+            lambda: evaluate_predictability(app, trace, with_prev=True,
+                                            n_trees=5, importance=True),
+            repeats=1,
+        )
+        for tgt, imps in res.importance.items():
+            for f, v in imps.items():
+                acc[tgt][f].append(v)
+        emit(f"fig3/{app}", us, "ok")
+    fig = {
+        tgt: {
+            f: {"mean": float(np.mean(v)), "std": float(np.std(v))}
+            for f, v in by_feat.items() if v
+        }
+        for tgt, by_feat in acc.items()
+    }
+    for tgt in fig:
+        top = sorted(fig[tgt], key=lambda f: -fig[tgt][f]["mean"])[:3]
+        emit(f"fig3/top_features/{tgt}", 0.0, ";".join(top))
+    save_json("fig3_feature_importance", fig)
+    return fig
+
+
+if __name__ == "__main__":
+    run(full=True)

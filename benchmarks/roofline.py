@@ -1,0 +1,119 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs_per_chip / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_chip / HBM_bandwidth
+  collective term = wire_bytes_per_chip / ICI_link_bandwidth
+(cost_analysis numbers come from the per-device SPMD module, so the
+"per chip" division is already done; see launch/dryrun.py.)
+
+Also reports MODEL_FLOPS = 6*N*D (N_active for MoE) and the useful-compute
+ratio MODEL_FLOPS / (HLO_FLOPs * chips), catching remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+from benchmarks.common import ART, emit, save_json
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # B/s
+ICI_BW = 50e9              # B/s per link
+
+DRYRUN_DIR = os.path.join(ART, "dryrun")
+
+
+def _model_flops(arch: str, shape_name: str) -> float:
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_total = cfg.param_count(active_only=cfg.is_moe)
+    embed = cfg.vocab * cfg.d_model
+    n = max(n_total - embed, 1)                    # non-embedding params
+    if shape.kind == "decode":
+        tokens = shape.global_batch                # one new token per sequence
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if shape.kind == "train" else 2.0   # fwd+bwd vs fwd
+    return mult * n * tokens
+
+
+def _advice(dominant: str, shape_kind: str) -> str:
+    if dominant == "collective":
+        return ("overlap the collective with compute (async reduce, "
+                "collective-matmul) or re-shard to cut wire bytes")
+    if dominant == "memory":
+        if shape_kind == "decode":
+            return ("decode is KV-cache-bandwidth-bound: shrink the cache "
+                    "(window/quantize/GQA-pack) or batch more sequences per pass")
+        return "fuse ops / cut remat recompute to reduce HBM round-trips"
+    return "raise MXU utilization (larger tiles, fewer transposes, bf16 paths)"
+
+
+def analyze_cell(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    if "cost" not in rec:
+        return None                                # scan-only multipod cell
+    chips = rec["n_devices"]
+    flops_dev = rec["cost"]["flops"]
+    # prefer the top-level-tensor HBM proxy (cost_analysis counts
+    # fusion-internal bytes + CPU-only converts; see launch/dryrun.py)
+    bytes_dev = rec.get("traffic", {}).get("traffic_bytes", rec["cost"]["bytes_accessed"])
+    wire_dev = sum(op["wire_bytes"] for op in rec["collectives"].values())
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_collective = wire_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    model_fl = _model_flops(rec["arch"], rec["shape"])
+    useful_ratio = model_fl / max(flops_dev * chips, 1.0)
+    ideal = model_fl / chips / PEAK_FLOPS
+    bound = max(terms.values())
+    from repro.configs import SHAPES
+
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        "chips": chips,
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_collective,
+        "dominant": dominant,
+        "model_flops": model_fl,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": ideal / bound if bound > 0 else 0.0,
+        "peak_mem_gib": rec["memory"]["peak_args_plus_temp"] / 2**30,
+        "advice": _advice(dominant, SHAPES[rec["shape"]].kind),
+    }
+
+
+def run(full: bool = True) -> dict:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze_cell(rec)
+        if row is None:
+            continue
+        rows.append(row)
+        emit(
+            f"roofline/{row['arch']}/{row['shape']}/{row['mesh']}"
+            + (f"/{row['tag']}" if row["tag"] else ""),
+            0.0,
+            f"dom={row['dominant']};frac={row['roofline_fraction']:.4f};"
+            f"c={row['compute_s']:.2e};m={row['memory_s']:.2e};x={row['collective_s']:.2e}",
+        )
+    save_json("roofline", rows)
+    return {"cells": rows}
+
+
+if __name__ == "__main__":
+    run()

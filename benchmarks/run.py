@@ -1,0 +1,64 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract) and writes
+full JSON artifacts under artifacts/.
+
+  table1  — predictability SMAPE (paper Table 1)
+  table2  — slack-isolation potential (paper Table 2)
+  table3  — overhead / energy / power per policy x app (paper Table 3)
+  fig3    — permutation feature importance (paper Fig. 3)
+  roofline— 3-term roofline per (arch x shape x mesh) from dry-run artifacts
+  runtime — framework micro-benchmarks (simulator/governor/barrier cost)
+
+``python -m benchmarks.run [--only table3,roofline] [--full]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="", help="comma-separated subset")
+    ap.add_argument("--full", action="store_true", help="slow full versions")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_runtime,
+        fig3_feature_importance,
+        roofline,
+        table1_predictability,
+        table2_slack_isolation,
+        table3_runtime_comparison,
+    )
+
+    suites = {
+        "table2": table2_slack_isolation.run,
+        "table3": table3_runtime_comparison.run,
+        "runtime": bench_runtime.run,
+        "table1": table1_predictability.run,
+        "fig3": fig3_feature_importance.run,
+        "roofline": roofline.run,
+    }
+    selected = [s.strip() for s in args.only.split(",") if s.strip()] or list(suites)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = 0
+    for name in selected:
+        if name not in suites:
+            print(f"{name},0.0,UNKNOWN-SUITE", flush=True)
+            failures += 1
+            continue
+        try:
+            suites[name](full=args.full)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+            failures += 1
+    print(f"total,{(time.time() - t0) * 1e6:.0f},suites={len(selected)};failures={failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

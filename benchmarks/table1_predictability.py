@@ -1,0 +1,55 @@
+"""Paper Table 1: region-duration predictability (SMAPE, random forests),
+with and without previous-call information."""
+from __future__ import annotations
+
+from benchmarks.common import baseline_trace, emit, save_json, time_call
+from repro.core.predictor import evaluate_predictability
+from repro.core.workloads import APPS
+
+# Paper Table 1 reference values (SMAPE %): (tcomp, tslack, tcopy)
+PAPER = {
+    "nas_bt.E.1024": ((57.0, 17.6, 52.5), (6.2, 12.4, 12.4)),
+    "nas_cg.E.1024": ((21.9, 7.1, 25.3), (16.2, 5.5, 11.0)),
+    "nas_ep.E.128": ((9.1, 8.4, 23.8), (9.7, 7.3, 24.6)),
+    "nas_ft.E.1024": ((1.2, 5.4, 9.7), (0.3, 1.2, 3.9)),
+    "nas_is.D.128": ((10.7, 15.2, 8.2), (5.3, 8.0, 2.4)),
+    "nas_lu.E.1024": ((0.9, 19.8, 0.5), (0.7, 13.5, 0.4)),
+    "nas_mg.E.128": ((5.1, 4.8, 13.0), (4.1, 5.3, 13.1)),
+    "nas_sp.E.1024": ((46.5, 11.8, 46.9), (4.1, 10.2, 7.3)),
+    "omen_1056p": ((1.0, 57.3, 75.8), (2.8, 55.4, 64.6)),
+}
+
+FAST_APPS = [
+    "nas_cg.E.1024", "nas_ft.E.1024", "nas_is.D.128", "nas_mg.E.128",
+    "omen_1056p",
+]
+
+
+def run(full: bool = False) -> dict:
+    apps = list(APPS) if full else FAST_APPS
+    table = {}
+    for app in apps:
+        _, _, trace = baseline_trace(app)
+        row = {}
+        for prev in (False, True):
+            us, res = time_call(
+                lambda: evaluate_predictability(app, trace, prev, n_trees=6),
+                repeats=1,
+            )
+            key = "with_prev" if prev else "no_prev"
+            row[key] = res.smape
+            emit(
+                f"table1/{app}/{key}",
+                us,
+                "tcomp={tcomp:.1f};tslack={tslack:.1f};tcopy={tcopy:.1f}".format(**res.smape),
+            )
+        if app in PAPER:
+            row["paper_no_prev"] = dict(zip(("tcomp", "tslack", "tcopy"), PAPER[app][0]))
+            row["paper_with_prev"] = dict(zip(("tcomp", "tslack", "tcopy"), PAPER[app][1]))
+        table[app] = row
+    save_json("table1_predictability", table)
+    return table
+
+
+if __name__ == "__main__":
+    run(full=True)

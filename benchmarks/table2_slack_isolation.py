@@ -1,0 +1,52 @@
+"""Paper Table 2: slack-isolation potential — coverage [% of execution time]
+each policy can run at the minimum P-state, on the baseline trace."""
+from __future__ import annotations
+
+from benchmarks.common import baseline_trace, emit, save_json, time_call
+from repro.core.policies import ALL_POLICIES
+from repro.core.simulator import coverage_on_trace
+from repro.core.workloads import APPS
+
+POLICIES = ["fermata_100ms", "fermata_500us", "countdown", "cntd_slack"]
+
+# Paper Table 2 reference [%]: Tcomm, Tslack, F100, F500, CNTD, CNTDS
+PAPER = {
+    "nas_bt.E.1024": (0.12, 0.07, 0.00, 0.00, 0.12, 0.07),
+    "nas_cg.E.1024": (34.84, 0.07, 0.39, 32.68, 32.96, 0.01),
+    "nas_ep.E.128": (7.56, 7.56, 0.00, 0.00, 7.56, 7.56),
+    "nas_ft.E.1024": (65.10, 12.28, 55.88, 57.80, 65.09, 12.28),
+    "nas_is.D.128": (62.73, 27.42, 31.14, 40.98, 62.65, 27.41),
+    "nas_lu.E.1024": (51.01, 45.51, 9.91, 21.93, 22.42, 21.79),
+    "nas_mg.E.128": (8.94, 0.09, 0.01, 7.95, 8.48, 0.06),
+    "nas_sp.E.1024": (0.05, 0.02, 0.00, 0.00, 0.05, 0.02),
+    "omen_60p": (59.69, 56.00, 43.87, 48.86, 59.60, 55.99),
+    "omen_1056p": (62.96, 56.42, 50.85, 60.18, 62.83, 56.41),
+}
+
+
+def run(full: bool = True) -> dict:
+    table = {}
+    for app in APPS:
+        wl, base, trace = baseline_trace(app)
+        total = base.tcomp + base.tslack + base.tcopy
+        row = {
+            "tcomm_pct": 100 * (base.tslack + base.tcopy) / total,
+            "tslack_pct": 100 * base.tslack / total,
+            "avg_mpi_ms": 1000 * (base.tslack + base.tcopy) / (base.calls * wl.n_ranks),
+        }
+        for pol in POLICIES:
+            us, cov = time_call(
+                lambda p=pol: coverage_on_trace(trace, ALL_POLICIES[p]), repeats=1
+            )
+            row[pol] = cov
+            emit(f"table2/{app}/{pol}", us, cov)
+        row["paper"] = dict(
+            zip(("tcomm", "tslack", "f100", "f500", "cntd", "cntds"), PAPER[app])
+        )
+        table[app] = row
+    save_json("table2_slack_isolation", table)
+    return table
+
+
+if __name__ == "__main__":
+    run()

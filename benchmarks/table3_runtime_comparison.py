@@ -1,0 +1,68 @@
+"""Paper Table 3: execution-time overhead, energy saving, power saving of
+every policy vs the Baseline, per application + averages/worst cases."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import baseline_trace, emit, save_json, time_call
+from repro.core.policies import ALL_POLICIES
+from repro.core.simulator import simulate
+from repro.core.workloads import APPS
+
+POLICIES = [
+    "minfreq", "fermata_100ms", "fermata_500us", "andante", "adagio",
+    "countdown", "cntd_slack",
+]
+
+# Paper Table 3 averages (ovh / esave / psave) for context
+PAPER_AVG = {
+    "minfreq": (55.14, 8.56, 36.35),
+    "fermata_100ms": (3.19, 11.07, 14.25),
+    "andante": (38.65, 5.45, 25.82),
+    "adagio": (42.87, 5.46, 27.53),
+    "countdown": (4.02, 15.28, 19.24),
+    "cntd_slack": (0.79, 9.96, 10.73),
+}
+
+
+def run(full: bool = True) -> dict:
+    table: dict = {"apps": {}, "avg": {}, "worst": {}, "paper_avg": PAPER_AVG}
+    acc = {p: [] for p in POLICIES}
+    for app in APPS:
+        wl, base, _ = baseline_trace(app)
+        row = {}
+        for pol in POLICIES:
+            us, res = time_call(lambda p=pol: simulate(wl, ALL_POLICIES[p])[0], repeats=1)
+            cell = {
+                "overhead_pct": res.overhead_vs(base),
+                "energy_saving_pct": res.energy_saving_vs(base),
+                "power_saving_pct": res.power_saving_vs(base),
+            }
+            row[pol] = cell
+            acc[pol].append(cell)
+            emit(
+                f"table3/{app}/{pol}", us,
+                f"ovh={cell['overhead_pct']:.2f};esave={cell['energy_saving_pct']:.2f}",
+            )
+        table["apps"][app] = row
+    for pol in POLICIES:
+        cells = acc[pol]
+        table["avg"][pol] = {
+            k: float(np.mean([c[k] for c in cells])) for k in cells[0]
+        }
+        table["worst"][pol] = {
+            "overhead_pct": float(max(c["overhead_pct"] for c in cells)),
+            "energy_saving_pct": float(min(c["energy_saving_pct"] for c in cells)),
+        }
+        emit(
+            f"table3/AVG/{pol}", 0.0,
+            "ovh={overhead_pct:.2f};esave={energy_saving_pct:.2f};psave={power_saving_pct:.2f}".format(
+                **table["avg"][pol]
+            ),
+        )
+    save_json("table3_runtime_comparison", table)
+    return table
+
+
+if __name__ == "__main__":
+    run()

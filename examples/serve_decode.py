@@ -1,0 +1,38 @@
+"""Batched serving: prefill a prompt batch, decode continuations with the
+KV/recurrent caches, compare a windowed-attention arch vs an SSM.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.models.inputs import make_batch
+from repro.serve.engine import ServeEngine
+
+
+def demo(arch: str, n_steps: int = 16) -> None:
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=128, temperature=0.8)
+    batch = make_batch(cfg, batch=4, seq_len=32, kind="prefill")
+    t0 = time.time()
+    out = eng.generate(batch, n_steps=n_steps, key=jax.random.PRNGKey(7))
+    dt = time.time() - t0
+    print(f"{arch:20s} generated {out.shape} tokens in {dt:.2f}s "
+          f"({4 * n_steps / dt:.1f} tok/s incl. compile)")
+    print(f"  sample: {out[0].tolist()}")
+
+
+def main() -> None:
+    print("batched generation across architecture families:")
+    demo("llama3.2-1b")          # dense GQA, linear KV cache
+    demo("mixtral-8x22b")        # MoE + sliding-window ring cache
+    demo("mamba2-130m")          # attention-free: O(1) recurrent state
+    demo("recurrentgemma-2b")    # hybrid RG-LRU + local attention
+
+
+if __name__ == "__main__":
+    main()

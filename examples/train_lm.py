@@ -1,0 +1,64 @@
+"""End-to-end driver: train the ~100M-parameter LM on the synthetic corpus.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+
+This is the paper-scale end-to-end example (deliverable b): real data
+pipeline with host prefetch, AdamW with warmup+cosine, checkpointing, and a
+live loss curve.  On this 1-core container a full step of the 100M model
+takes ~O(1 min); pass ``--preset small`` for a fast local run of the same
+code path.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.dist.checkpoint import CheckpointManager
+from repro.train.data import DataLoader
+from repro.train.loop import init_state, make_train_step
+from repro.train.optimizer import OptConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--preset", choices=["100m", "small"], default="small")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = get_config("countdown-100m")
+    if args.preset == "small":
+        cfg = reduced(cfg, n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                      d_ff=1024, vocab=4096)
+        args.seq = min(args.seq, 128)
+    opt_cfg = OptConfig(lr=6e-4, warmup_steps=max(10, args.steps // 20),
+                        total_steps=args.steps)
+    state = init_state(cfg, opt_cfg, jax.random.PRNGKey(0))
+    n_params = sum(int(x.size) for x in jax.tree.leaves(state["params"]))
+    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params), "
+          f"batch {args.batch} x seq {args.seq}")
+
+    step = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0,))
+    loader = DataLoader(cfg, batch=args.batch, seq_len=args.seq)
+    mgr = CheckpointManager(args.checkpoint_dir, keep=2, async_save=True)
+    losses = []
+    for i, batch in zip(range(args.steps), loader):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+        if (i + 1) % max(1, args.steps // 25) == 0:
+            print(f"step {i+1:4d}  loss {losses[-1]:.4f}  "
+                  f"(avg10 {np.mean(losses[-10:]):.4f})  lr {float(m['lr']):.2e}",
+                  flush=True)
+        if (i + 1) % 100 == 0:
+            mgr.save(i + 1, jax.device_get(state))
+    mgr.wait()
+    loader.close()
+    print(f"\nloss: {np.mean(losses[:10]):.3f} -> {np.mean(losses[-10:]):.3f} "
+          f"over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

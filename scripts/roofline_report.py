@@ -1,0 +1,86 @@
+"""Render the roofline appendix (markdown) from artifacts/dryrun into
+EXPERIMENTS.md §Appendix.  Run after the sweep:
+    PYTHONPATH=src python scripts/roofline_report.py
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import analyze_cell  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+MARK = "\n## Appendix — full roofline table"
+
+
+def fmt(x):
+    return f"{x:.2e}"
+
+
+def main() -> None:
+    rows, skips, multipod_ok, errors = [], [], [], []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        rec = json.load(open(path))
+        tag = rec.get("tag", "")
+        if rec["status"] == "skipped":
+            skips.append((rec["arch"], rec["shape"], rec["mesh"]))
+            continue
+        if rec["status"] == "error":
+            errors.append((rec["arch"], rec["shape"], rec["mesh"], tag,
+                           rec.get("error", "")[:90]))
+            continue
+        if "cost" not in rec:                      # scan-only (compile+memory)
+            multipod_ok.append(
+                (rec["arch"], rec["shape"], rec["mesh"], tag,
+                 rec["memory"]["peak_args_plus_temp"] / 2**30)
+            )
+            continue
+        row = analyze_cell(rec)
+        if row:
+            rows.append(row)
+
+    lines = [MARK, "", "Single-pod (16x16 = 256 chips) measured cells "
+             "(terms in seconds/step/chip; frac = ideal-compute / bound):", ""]
+    lines.append("| arch | shape | variant | compute | memory | collective "
+                 "| dominant | frac | useful | peak GiB |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["tag"])):
+        if r["mesh"] != "pod":
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['tag'] or 'baseline'} "
+            f"| {fmt(r['compute_s'])} | {fmt(r['memory_s'])} "
+            f"| {fmt(r['collective_s'])} | {r['dominant']} "
+            f"| {r['roofline_fraction']:.3f} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['peak_mem_gib']:.2f} |"
+        )
+    lines += ["", f"Skipped cells (long_500k x full-attention archs, per "
+              f"assignment): {len(skips)}", ""]
+    if multipod_ok:
+        lines += ["Compile-success + memory cells (multi-pod 2x16x16 = 512 "
+                  "chips, scan-only; plus tagged memory variants):", ""]
+        lines.append("| arch | shape | mesh | variant | peak GiB/chip |")
+        lines.append("|---|---|---|---|---|")
+        for a, s, me, t, m in sorted(multipod_ok):
+            lines.append(f"| {a} | {s} | {me} | {t or '-'} | {m:.2f} |")
+    if errors:
+        lines += ["", "Cells with recorded errors:", ""]
+        for a, s, m, t, e in errors:
+            lines.append(f"- {a} {s} {m} {t}: `{e}`")
+    lines.append("")
+
+    text = open(EXP).read()
+    if MARK in text:
+        text = text[: text.index(MARK)]
+    with open(EXP, "w") as f:
+        f.write(text + "\n".join(lines))
+    print(f"appendix written: {len(rows)} measured, {len(multipod_ok)} "
+          f"multipod, {len(skips)} skipped, {len(errors)} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""The paper's own evaluation vehicle: a ~100M dense LM.
+
+Used by ``examples/train_lm.py`` and ``examples/energy_aware_training.py``
+to exercise the COUNTDOWN Slack runtime end-to-end on this container.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="countdown-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    d_ff=3072,
+    vocab=32768,
+    attention="full",
+    tie_embeddings=True,
+)

@@ -1,0 +1,14 @@
+"""GLM-4-9B [hf:THUDM/glm-4-9b] — RoPE, GQA (2 KV heads)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    d_ff=13696,
+    vocab=151552,
+    attention="full",
+)

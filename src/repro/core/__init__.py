@@ -1,0 +1,1 @@
+"""COUNTDOWN Slack core: the paper's contribution as a composable JAX module."""

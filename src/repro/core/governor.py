@@ -1,0 +1,136 @@
+"""Host-side governor: the live runtime that consumes phase events.
+
+This is the analogue of the paper's timer+callback machinery (§4.3): the
+instrumented collectives emit (rank, phase, call_id, t) events through
+``repro.core.instrument.set_event_sink``; the governor reconstructs per-call
+slack/copy durations, applies the configured policy's timeout decision, logs
+the P-state actuation it *would* issue (on Intel: wrmsr via MSR_SAFE; on a
+TPU host: SMC power capping — see DESIGN.md §2), estimates energy via the
+calibrated HwModel, and feeds the straggler detector.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.policies import COUNTDOWN_SLACK, Policy
+from repro.core.pstate import DEFAULT_HW, HwModel
+from repro.dist.straggler import StragglerDetector
+
+
+@dataclass
+class CallRecord:
+    call_id: int
+    enter: Dict[int, float] = field(default_factory=dict)       # rank -> t
+    slack_end: Dict[int, float] = field(default_factory=dict)
+    copy_end: Dict[int, float] = field(default_factory=dict)
+
+
+@dataclass
+class GovernorReport:
+    n_calls: int
+    n_downshifts: int
+    total_slack: float
+    total_copy: float
+    exploited_slack: float
+    energy_baseline: float           # J during instrumented phases, no policy
+    energy_policy: float             # J with the policy's P-state trajectory
+    straggler_summary: Dict[int, float]
+    stragglers: List[Tuple[int, float]]
+
+    @property
+    def energy_saving_pct(self) -> float:
+        if self.energy_baseline <= 0:
+            return 0.0
+        return 100.0 * (1.0 - self.energy_policy / self.energy_baseline)
+
+
+class Governor:
+    """Reconstructs phases from instrument events and applies the policy."""
+
+    def __init__(
+        self,
+        policy: Policy = COUNTDOWN_SLACK,
+        hw: HwModel = DEFAULT_HW,
+        detector: Optional[StragglerDetector] = None,
+    ):
+        self.policy = policy
+        self.hw = hw
+        self.detector = detector or StragglerDetector()
+        # call_ids are assigned at TRACE time, so the same id recurs on every
+        # executed step: rotate to a fresh occurrence when a rank re-enters
+        self._calls: Dict[int, CallRecord] = {}
+        self._done: List[CallRecord] = []
+        self._lock = threading.Lock()
+        self.actuation_log: List[Tuple[float, int, str]] = []   # (t, rank, action)
+
+    # the instrument event sink ------------------------------------------------
+    def sink(self, rank: int, phase: str, call_id: int, t: float) -> None:
+        with self._lock:
+            rec = self._calls.setdefault(call_id, CallRecord(call_id))
+            if phase == "barrier_enter" and rank in rec.enter:
+                self._done.append(rec)                          # new occurrence
+                rec = CallRecord(call_id)
+                self._calls[call_id] = rec
+            if phase == "barrier_enter":
+                rec.enter[rank] = t
+            elif phase == "barrier_exit":
+                rec.slack_end[rank] = t
+                slack = t - rec.enter.get(rank, t)
+                if slack >= self.policy.theta and self.policy.comm_mode in (
+                    "timeout", "predict_timeout",
+                ):
+                    self.actuation_log.append((t, rank, "set_pstate_min"))
+                    self.actuation_log.append((t, rank, "restore_pstate_max"))
+            elif phase == "copy_exit":
+                rec.copy_end[rank] = t
+
+    def finalize(self) -> GovernorReport:
+        hw, pol = self.hw, self.policy
+        theta_eff = pol.theta + 0.5 * hw.switch_latency
+        n_down = 0
+        tot_slack = tot_copy = exploited = 0.0
+        e_base = e_pol = 0.0
+        all_records = self._done + list(self._calls.values())
+        n_total = len(all_records)
+        for rec in all_records:
+            if rec.enter:
+                self.detector.observe_barrier(rec.enter)
+            for rank, t0 in rec.enter.items():
+                t1 = rec.slack_end.get(rank)
+                if t1 is None:
+                    continue
+                slack = max(t1 - t0, 0.0)
+                tot_slack += slack
+                copy = max(rec.copy_end.get(rank, t1) - t1, 0.0)
+                tot_copy += copy
+                e_base += hw.watts(hw.f_max, hw.act_slack) * slack
+                e_base += hw.watts(hw.f_max, hw.act_copy) * copy
+                low = max(slack - theta_eff, 0.0)
+                if low > 0:
+                    n_down += 1
+                    exploited += low
+                e_pol += hw.watts(hw.f_max, hw.act_slack) * (slack - low)
+                e_pol += hw.watts(hw.f_min, hw.act_slack) * low
+                if pol.comm_scope == "comm" and low > 0:
+                    e_pol += hw.watts(hw.f_min, hw.act_copy) * copy
+                else:
+                    e_pol += hw.watts(hw.f_max, hw.act_copy) * copy
+        return GovernorReport(
+            n_calls=n_total,
+            n_downshifts=n_down,
+            total_slack=tot_slack,
+            total_copy=tot_copy,
+            exploited_slack=exploited,
+            energy_baseline=e_base,
+            energy_policy=e_pol,
+            straggler_summary=self.detector.summary(),
+            stragglers=self.detector.stragglers(),
+        )
+
+    def reset(self) -> None:
+        with self._lock:
+            self._calls.clear()
+            self._done.clear()
+            self.actuation_log.clear()

@@ -1,0 +1,166 @@
+"""Collective instrumentation: artificial barriers + host phase events.
+
+This is the JAX analogue of the paper's PMPI interception layer (§4.1-4.2):
+
+* ``cd_psum`` / ``cd_all_gather`` / ``cd_ppermute`` wrap the real collective
+  with (i) an *artificial barrier* — a 1-element ``psum`` over the same axes,
+  the ``MPI_Barrier``/``Isend+Wait`` analogue — that contains exactly the
+  slack, and (ii) ordered ``io_callback`` phase events (barrier-enter,
+  barrier-exit = slack end, collective-exit = copy end) that drive the host
+  :class:`~repro.core.governor.Governor`, which applies the timeout policy.
+
+* The instrumentation mode is ambient (``set_mode``), mirroring the paper's
+  LD_PRELOAD transparency: model / optimizer code always calls the wrappers
+  and pays zero cost when the mode is "off".
+
+Modes:
+  off      — wrapper == real collective (baseline).
+  barrier  — artificial barrier emitted (dry-run visible, no host events).
+  profile  — barrier + host phase events (live runs; energy accounting).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+AxisNames = Union[str, Sequence[str]]
+
+_MODE = "off"
+_EVENTS_ENABLED = False
+_SINK: Optional[Callable[[int, str, int, float], None]] = None
+_LOCK = threading.Lock()
+_CALL_COUNTER = [0]
+
+
+def set_mode(mode: str) -> None:
+    """Set ambient instrumentation mode: off | barrier | profile."""
+    global _MODE
+    if mode not in ("off", "barrier", "profile"):
+        raise ValueError(mode)
+    _MODE = mode
+
+
+def enable_events(on: bool) -> None:
+    """Host phase events need a *fully manual* shard_map region (io_callback
+    limitation under partial auto-sharding); callers in such regions opt in.
+    """
+    global _EVENTS_ENABLED
+    _EVENTS_ENABLED = on
+
+
+def get_mode() -> str:
+    return _MODE
+
+
+def set_event_sink(sink: Optional[Callable[[int, str, int, float], None]]) -> None:
+    """Install the host event consumer: sink(rank, phase, call_id, t_host)."""
+    global _SINK
+    _SINK = sink
+
+
+def _emit(rank, phase_code, call_id) -> None:
+    """Host-side callback: timestamp and forward to the governor sink."""
+    if _SINK is None:
+        return
+    phase = {0: "barrier_enter", 1: "barrier_exit", 2: "copy_exit"}[int(phase_code)]
+    _SINK(int(rank), phase, int(call_id), time.monotonic())
+
+
+def _host_event(rank: jnp.ndarray, phase_code: int, call_id: int) -> None:
+    jax.experimental.io_callback(
+        _emit, None, rank, jnp.int32(phase_code), jnp.int32(call_id), ordered=True
+    )
+
+
+def _next_call_id() -> int:
+    with _LOCK:
+        _CALL_COUNTER[0] += 1
+        return _CALL_COUNTER[0]
+
+
+def _barrier_token(tree: Any, axes: AxisNames) -> jnp.ndarray:
+    """The artificial barrier: a 1-element all-reduce over ``axes``.
+
+    Derived from live data so the partitioner cannot constant-fold it away.
+    """
+    leaf = jax.tree.leaves(tree)[0]
+    probe = jnp.real(jnp.ravel(leaf)[0]).astype(jnp.float32) * 0.0 + 1.0
+    return lax.psum(probe, axes)
+
+
+def _instrumented(real_op: Callable[[Any], Any], tree: Any, axes: AxisNames) -> Any:
+    mode = _MODE
+    if mode == "off":
+        return real_op(tree)
+    call_id = _next_call_id()
+    profile = mode == "profile" and _EVENTS_ENABLED
+    if profile:
+        rank = lax.axis_index(axes if isinstance(axes, str) else axes[0])
+        _host_event(rank, 0, call_id)                 # barrier enter (slack start)
+    token = _barrier_token(tree, axes)                # ---- artificial barrier ----
+    # order: real collective strictly after the barrier completes
+    tree, token = lax.optimization_barrier((tree, token))
+    if profile:
+        _host_event(rank, 1, call_id)                 # barrier exit (slack end)
+    out = real_op(tree)
+    if profile:
+        out, token = lax.optimization_barrier((out, token))
+        _host_event(rank, 2, call_id)                 # copy exit
+    return out
+
+
+# --------------------------------------------------------------------------
+# public wrappers (the "PMPI interface")
+# --------------------------------------------------------------------------
+
+def cd_psum(tree: Any, axes: AxisNames) -> Any:
+    """Instrumented ``lax.psum`` (collective COUNTDOWN Slack barrier §4.2.1)."""
+    return _instrumented(lambda t: jax.tree.map(lambda a: lax.psum(a, axes), t), tree, axes)
+
+
+def cd_pmean(tree: Any, axes: AxisNames) -> Any:
+    return _instrumented(lambda t: jax.tree.map(lambda a: lax.pmean(a, axes), t), tree, axes)
+
+
+def cd_all_gather(tree: Any, axes: AxisNames, *, axis: int = 0, tiled: bool = True) -> Any:
+    return _instrumented(
+        lambda t: jax.tree.map(lambda a: lax.all_gather(a, axes, axis=axis, tiled=tiled), t),
+        tree, axes,
+    )
+
+
+def cd_ppermute(tree: Any, axis_name: str, perm) -> Any:
+    """Instrumented ``lax.ppermute`` (P2P COUNTDOWN Slack barrier §4.2.2).
+
+    The artificial barrier for P2P is a 1-element ppermute over the same
+    permutation — the non-blocking send/recv + wait analogue: it involves
+    exactly the communicating pair, not the world.
+    """
+    mode = _MODE
+
+    def real_op(t):
+        return jax.tree.map(lambda a: lax.ppermute(a, axis_name, perm), t)
+
+    if mode == "off":
+        return real_op(tree)
+    call_id = _next_call_id()
+    profile = mode == "profile" and _EVENTS_ENABLED
+    if profile:
+        rank = lax.axis_index(axis_name)
+        _host_event(rank, 0, call_id)
+    leaf = jax.tree.leaves(tree)[0]
+    probe = jnp.real(jnp.ravel(leaf)[0]).astype(jnp.float32) * 0.0 + 1.0
+    token = lax.ppermute(probe, axis_name, perm)      # P2P artificial barrier
+    tree, token = lax.optimization_barrier((tree, token))
+    if profile:
+        _host_event(rank, 1, call_id)
+    out = real_op(tree)
+    if profile:
+        out, token = lax.optimization_barrier((out, token))
+        _host_event(rank, 2, call_id)
+    return out

@@ -1,0 +1,67 @@
+"""Power-management policies: COUNTDOWN Slack + all paper baselines (§4, §5).
+
+Each policy is a declarative config consumed by the vectorized engine in
+``repro.core.simulator``:
+
+  baseline      — max P-state everywhere (paper's *Baseline*).
+  minfreq       — min P-state everywhere (paper's *Min Freq*).
+  fermata_100ms — proactive: arms a 100 ms timer only when the last comm at
+                  this call site was >= 2x the threshold; slows the WHOLE
+                  comm (slack+copy).  Stack-hash cost per call.
+  fermata_500us — same, threshold tuned to the PCU latency.
+  andante       — proactive: last-value predicts (Tcomp, Tslack) per call
+                  site and picks the compute P-state that absorbs the slack.
+  adagio        — andante + fermata-500us applied to the isolated slack.
+  countdown     — reactive: arms a 500 us timer at EVERY comm entry; slows
+                  slack+copy.  No hash, no tables.
+  cntd_slack    — COUNTDOWN Slack (the paper): artificial barrier isolates
+                  the slack; 500 us reactive timer applies min P-state to
+                  slack ONLY; copy runs at max P-state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Policy:
+    name: str
+    compute_mode: str = "max"       # max | min | andante
+    comm_mode: str = "none"         # none | timeout | predict_timeout | pin_min
+    comm_scope: str = "comm"        # comm (slack+copy) | slack (barrier-isolated)
+    theta: float = 500e-6           # timeout duration (s)
+    uses_hash: bool = False         # per-call stack-hash + lookup cost
+    uses_barrier: bool = False      # artificial barrier inserted (cost + isolation)
+
+
+BASELINE = Policy("baseline")
+MINFREQ = Policy("minfreq", compute_mode="min", comm_mode="pin_min")
+FERMATA_100MS = Policy(
+    "fermata_100ms", comm_mode="predict_timeout", comm_scope="comm",
+    theta=100e-3, uses_hash=True,
+)
+FERMATA_500US = Policy(
+    "fermata_500us", comm_mode="predict_timeout", comm_scope="comm",
+    theta=500e-6, uses_hash=True,
+)
+ANDANTE = Policy(
+    "andante", compute_mode="andante", comm_mode="none",
+    uses_hash=True, uses_barrier=True,
+)
+ADAGIO = Policy(
+    "adagio", compute_mode="andante", comm_mode="timeout", comm_scope="slack",
+    theta=500e-6, uses_hash=True, uses_barrier=True,
+)
+COUNTDOWN = Policy("countdown", comm_mode="timeout", comm_scope="comm", theta=500e-6)
+COUNTDOWN_SLACK = Policy(
+    "cntd_slack", comm_mode="timeout", comm_scope="slack",
+    theta=500e-6, uses_barrier=True,
+)
+
+ALL_POLICIES = {
+    p.name: p
+    for p in [
+        BASELINE, MINFREQ, FERMATA_100MS, FERMATA_500US,
+        ANDANTE, ADAGIO, COUNTDOWN, COUNTDOWN_SLACK,
+    ]
+}

@@ -1,0 +1,225 @@
+"""Region-duration predictability study (paper §6.2, Table 1 + Fig. 3).
+
+A from-scratch numpy random-forest regressor (no sklearn in this
+environment): CART trees with variance-reduction splits over quantile
+candidate thresholds, bootstrap bagging, feature subsampling.  Targets are
+trained in log-space (the paper found this flattens duration peaks) and
+evaluated with SMAPE on the raw scale.  Feature importance uses the
+permutation method (the paper explicitly prefers it over impurity
+importance).
+
+Features (paper §6.2): rank id, MPI call type, bytes received, bytes sent,
+group size, locality, task id (call-site hash) — plus, in the
+"with previous info" variant, the last (Tcomp, Tslack, Tcopy) of the same
+(site, rank).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.simulator import TraceRecord
+
+FEATURES_BASE = [
+    "rank", "call_type", "bytes_recv", "bytes_sent", "group_size",
+    "locality", "task_id",
+]
+FEATURES_PREV = ["prev_tcomp", "prev_tslack", "prev_tcopy"]
+TARGETS = ["tcomp", "tslack", "tcopy"]
+
+
+# --------------------------------------------------------------------------
+# dataset construction from a simulator trace
+# --------------------------------------------------------------------------
+
+def build_dataset(
+    trace: TraceRecord,
+    with_prev: bool,
+    ranks_per_node: int = 18,
+    max_rows: int = 60_000,
+    seed: int = 0,
+) -> Tuple[np.ndarray, np.ndarray, List[str]]:
+    """Returns (X, Y[,3], feature_names).  Rows ordered rank-major then time."""
+    t_tasks, n = trace.comp.shape
+    rows: List[List[float]] = []
+    targets: List[List[float]] = []
+    last: Dict[Tuple[int, int], Tuple[float, float, float]] = {}
+    for r in range(n):
+        for k in range(t_tasks):
+            site = int(trace.site[k])
+            p2p = bool(trace.is_p2p[k])
+            group = 2 if p2p else n
+            # locality: fraction of the group on this rank's node
+            if p2p:
+                locality = 1.0 if group <= ranks_per_node else 0.5
+            else:
+                locality = min(1.0, ranks_per_node / n)
+            nbytes = float(trace.nbytes[k])
+            feat = [
+                float(r), 1.0 if p2p else 0.0, nbytes, nbytes,
+                float(group), locality, float(site),
+            ]
+            tgt = [
+                float(trace.comp[k, r]),
+                float(trace.slack[k, r]),
+                float(trace.copy[k, r]),
+            ]
+            if with_prev:
+                prev = last.get((site, r))
+                if prev is None:
+                    last[(site, r)] = tuple(tgt)
+                    continue                      # paper: needs history
+                feat = feat + list(prev)
+                last[(site, r)] = tuple(tgt)
+            rows.append(feat)
+            targets.append(tgt)
+    x = np.asarray(rows, dtype=np.float64)
+    y = np.asarray(targets, dtype=np.float64)
+    if len(x) > max_rows:
+        idx = np.random.default_rng(seed).choice(len(x), max_rows, replace=False)
+        x, y = x[idx], y[idx]
+    names = FEATURES_BASE + (FEATURES_PREV if with_prev else [])
+    return x, y, names
+
+
+# --------------------------------------------------------------------------
+# CART regression tree + random forest (numpy)
+# --------------------------------------------------------------------------
+
+@dataclass
+class _Node:
+    feature: int = -1
+    threshold: float = 0.0
+    left: int = -1
+    right: int = -1
+    value: float = 0.0
+
+
+class DecisionTree:
+    def __init__(self, max_depth=12, min_leaf=5, n_thresholds=16, rng=None):
+        self.max_depth = max_depth
+        self.min_leaf = min_leaf
+        self.n_thresholds = n_thresholds
+        self.rng = rng or np.random.default_rng()
+        self.nodes: List[_Node] = []
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "DecisionTree":
+        self.n_features = x.shape[1]
+        self.k = max(1, int(np.sqrt(self.n_features)))
+        self._grow(x, y, 0)
+        return self
+
+    def _grow(self, x, y, depth) -> int:
+        idx = len(self.nodes)
+        self.nodes.append(_Node(value=float(y.mean())))
+        if depth >= self.max_depth or len(y) < 2 * self.min_leaf or np.ptp(y) == 0:
+            return idx
+        feats = self.rng.choice(self.n_features, self.k, replace=False)
+        best = (0.0, -1, 0.0)                     # (gain, feature, threshold)
+        base_sse = float(np.var(y)) * len(y)
+        for f in feats:
+            col = x[:, f]
+            qs = np.quantile(col, np.linspace(0.05, 0.95, self.n_thresholds))
+            for thr in np.unique(qs):
+                mask = col <= thr
+                nl = int(mask.sum())
+                if nl < self.min_leaf or len(y) - nl < self.min_leaf:
+                    continue
+                sse = float(np.var(y[mask])) * nl + float(np.var(y[~mask])) * (len(y) - nl)
+                gain = base_sse - sse
+                if gain > best[0]:
+                    best = (gain, f, float(thr))
+        if best[1] < 0:
+            return idx
+        _, f, thr = best
+        mask = x[:, f] <= thr
+        node = self.nodes[idx]
+        node.feature, node.threshold = f, thr
+        node.left = self._grow(x[mask], y[mask], depth + 1)
+        node.right = self._grow(x[~mask], y[~mask], depth + 1)
+        return idx
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        out = np.empty(len(x))
+        for i, row in enumerate(x):
+            j = 0
+            while self.nodes[j].feature >= 0:
+                n = self.nodes[j]
+                j = n.left if row[n.feature] <= n.threshold else n.right
+            out[i] = self.nodes[j].value
+        return out
+
+
+class RandomForest:
+    def __init__(self, n_trees=20, max_depth=12, min_leaf=5, seed=0):
+        self.n_trees = n_trees
+        self.max_depth = max_depth
+        self.min_leaf = min_leaf
+        self.seed = seed
+        self.trees: List[DecisionTree] = []
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "RandomForest":
+        rng = np.random.default_rng(self.seed)
+        self.trees = []
+        for _ in range(self.n_trees):
+            idx = rng.choice(len(x), len(x), replace=True)
+            t = DecisionTree(self.max_depth, self.min_leaf, rng=rng).fit(x[idx], y[idx])
+            self.trees.append(t)
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return np.mean([t.predict(x) for t in self.trees], axis=0)
+
+
+# --------------------------------------------------------------------------
+# evaluation
+# --------------------------------------------------------------------------
+
+def smape(pred: np.ndarray, actual: np.ndarray) -> float:
+    """Paper footnote 3: 100 * |pred-actual| / (pred+actual)."""
+    denom = np.abs(pred) + np.abs(actual)
+    ok = denom > 0
+    return float(np.mean(100.0 * np.abs(pred - actual)[ok] / denom[ok]))
+
+
+@dataclass
+class PredictabilityResult:
+    app: str
+    with_prev: bool
+    smape: Dict[str, float]                       # target -> %
+    importance: Dict[str, Dict[str, float]]       # target -> feature -> [0,1]
+
+
+def evaluate_predictability(
+    app: str,
+    trace: TraceRecord,
+    with_prev: bool,
+    n_trees: int = 12,
+    seed: int = 0,
+    importance: bool = False,
+) -> PredictabilityResult:
+    x, y, names = build_dataset(trace, with_prev, seed=seed)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(x))
+    n_train = int(0.7 * len(x))
+    tr, te = perm[:n_train], perm[n_train:]
+    out_smape: Dict[str, float] = {}
+    out_imp: Dict[str, Dict[str, float]] = {}
+    eps = 1e-9
+    for j, tgt in enumerate(TARGETS):
+        ylog = np.log(np.maximum(y[:, j], eps))
+        rf = RandomForest(n_trees=n_trees, seed=seed).fit(x[tr], ylog[tr])
+        pred = np.exp(rf.predict(x[te]))
+        out_smape[tgt] = smape(pred, y[te, j])
+        if importance:
+            base = smape(pred, y[te, j])
+            imps = {}
+            for f, name in enumerate(names):
+                xs = x[te].copy()
+                xs[:, f] = rng.permutation(xs[:, f])
+                imps[name] = max(smape(np.exp(rf.predict(xs)), y[te, j]) - base, 0.0)
+            mx = max(imps.values()) or 1.0
+            out_imp[tgt] = {k: v / mx for k, v in imps.items()}
+    return PredictabilityResult(app, with_prev, out_smape, out_imp)

@@ -1,0 +1,328 @@
+"""Vectorized discrete-event engine for multi-rank MPI-style execution.
+
+Semantics follow the paper's execution model (Fig. 1): each rank alternates
+Tcomp -> (blocking comm = Tslack + Tcopy).  Collectives synchronize the whole
+communicator; P2P synchronizes pairs.  Slack is *emergent*: the barrier
+resolves when the critical rank arrives.  Policies act through
+
+  * the compute P-state (Andante/Adagio/MinFreq),
+  * a timeout during the comm (Fermata/COUNTDOWN: slack+copy;
+    COUNTDOWN Slack/Adagio: barrier-isolated slack only),
+  * per-call fixed costs (stack hash for proactive policies, artificial
+    barrier for COUNTDOWN Slack / Andante / Adagio, timer syscalls),
+  * the PCU commit latency: a restore issued at slack end leaves the core
+    pinned at f_min for up to ``switch_latency`` into the next phase —
+    the engine carries this residue (``ell``) across phases.
+
+Everything is vectorized over ranks; one python-level loop over tasks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.policies import Policy
+from repro.core.pstate import DEFAULT_HW, HwModel
+
+HASH_COST = 25e-6       # stack walk + hash + table lookup per MPI call (§6.4)
+BARRIER_COST = 1.5e-6   # artificial MPI_Barrier / Isend+Wait pair latency
+TIMER_COST = 0.5e-6     # setitimer syscall
+PMU_COST = 15e-6        # Andante: per-region PMU reads + P-state computation
+
+
+@dataclass
+class Workload:
+    """A generated multi-rank trace (base durations measured at f_max)."""
+
+    name: str
+    n_ranks: int
+    comp: np.ndarray            # (T, N) compute work, f_max-seconds
+    copy: np.ndarray            # (T,)   copy work, f_max-seconds
+    is_p2p: np.ndarray          # (T,)   bool
+    partner: np.ndarray         # (T, N) pair partner (valid where is_p2p)
+    site: np.ndarray            # (T,)   call-site id ("stack hash")
+    nbytes: np.ndarray          # (T,)   message payload bytes
+    beta_comp: float = 0.3      # CPU-bound fraction of compute
+    beta_copy: float = 0.15     # CPU-bound fraction of copy
+    copy_jitter: Optional[np.ndarray] = None    # (T,N) per-rank copy factor
+
+    @property
+    def n_tasks(self) -> int:
+        return self.comp.shape[0]
+
+    @property
+    def n_sites(self) -> int:
+        return int(self.site.max()) + 1
+
+
+@dataclass
+class SimResult:
+    name: str
+    time: float                 # wall time (s) = slowest rank
+    energy: float               # watt-seconds, summed over ranks
+    tcomp: float                # per-rank-summed phase seconds
+    tslack: float
+    tcopy: float
+    exploited: float            # seconds spent at f_min inside comm phases
+    exploited_slack: float      # ... restricted to slack
+    calls: int
+
+    def overhead_vs(self, base: "SimResult") -> float:
+        return 100.0 * (self.time / base.time - 1.0)
+
+    def energy_saving_vs(self, base: "SimResult") -> float:
+        return 100.0 * (1.0 - self.energy / base.energy)
+
+    def power_saving_vs(self, base: "SimResult") -> float:
+        p_self = self.energy / self.time
+        p_base = base.energy / base.time
+        return 100.0 * (1.0 - p_self / p_base)
+
+
+@dataclass
+class TraceRecord:
+    """Per-(task, rank) baseline trace for analysis / ML (paper §6.2)."""
+
+    site: np.ndarray            # (T,)
+    is_p2p: np.ndarray          # (T,)
+    nbytes: np.ndarray          # (T,)
+    comp: np.ndarray            # (T, N) realized durations at f_max
+    slack: np.ndarray           # (T, N)
+    copy: np.ndarray            # (T, N)
+
+
+def _phase(hw: HwModel, work, beta, f, ell, activity):
+    """Run ``work`` f_max-seconds of work at frequency ``f`` with the first
+    ``ell`` seconds pinned at f_min.  Returns (duration, energy, ell_left)."""
+    work = np.asarray(work, dtype=np.float64)
+    slow_min = hw.slowdown(hw.f_min, beta)
+    slow_f = hw.slowdown(f, beta)
+    w_pin = ell / slow_min                              # work done while pinned
+    full_pin = w_pin >= work
+    dur = np.where(full_pin, work * slow_min, ell + (work - w_pin) * slow_f)
+    ell_left = np.where(full_pin, ell - work * slow_min, 0.0)
+    t_min = np.minimum(ell, dur)
+    energy = hw.watts(hw.f_min, activity) * t_min + hw.watts(f, activity) * np.maximum(
+        dur - t_min, 0.0
+    )
+    return dur, energy, ell_left
+
+
+def _two_rate_phase(hw: HwModel, work, beta, t_hi, f_hi, activity):
+    """Work at ``f_hi`` for up to ``t_hi`` seconds, then f_min until done."""
+    work = np.asarray(work, dtype=np.float64)
+    t_hi = np.minimum(t_hi, 1e30)                       # keep inf out of arithmetic
+    slow_hi = hw.slowdown(f_hi, beta)
+    slow_min = hw.slowdown(hw.f_min, beta)
+    w_hi = t_hi / slow_hi
+    fits = w_hi >= work
+    dur = np.where(fits, work * slow_hi, t_hi + (work - w_hi) * slow_min)
+    t_at_hi = np.minimum(dur, t_hi)
+    t_at_min = np.maximum(dur - t_hi, 0.0)
+    energy = hw.watts(f_hi, activity) * t_at_hi + hw.watts(hw.f_min, activity) * t_at_min
+    return dur, energy, t_at_min
+
+
+def simulate(
+    wl: Workload,
+    pol: Policy,
+    hw: HwModel = DEFAULT_HW,
+    collect_trace: bool = False,
+) -> Tuple[SimResult, Optional[TraceRecord]]:
+    n, t_tasks = wl.n_ranks, wl.n_tasks
+    fmax, fmin, lat = hw.f_max, hw.f_min, hw.switch_latency
+    grid = hw.pstates()
+
+    t = np.zeros(n)
+    ell = np.zeros(n)                                   # pinned-at-fmin residue
+    energy = np.zeros(n)
+    tcomp = tslack = tcopy = 0.0
+    exploited = exploited_slack = 0.0
+
+    # per-site last-value tables
+    n_sites = wl.n_sites
+    last_comm = np.full((n_sites, n), np.nan)           # fermata
+    last_comp = np.full((n_sites, n), np.nan)           # andante (work units)
+    last_slack = np.full((n_sites, n), np.nan)
+
+    trace_comp = np.zeros((t_tasks, n)) if collect_trace else None
+    trace_slack = np.zeros((t_tasks, n)) if collect_trace else None
+    trace_copy = np.zeros((t_tasks, n)) if collect_trace else None
+
+    # effective timeout: timer expiry + expected PCU commit quantization
+    theta_eff = pol.theta + 0.5 * lat
+
+    for k in range(t_tasks):
+        site = int(wl.site[k])
+        work = wl.comp[k].astype(np.float64).copy()
+
+        # ---- per-call fixed costs (CPU work at current frequency) ----
+        if pol.uses_hash:
+            work = work + HASH_COST
+        if pol.uses_barrier:
+            work = work + BARRIER_COST
+        if pol.comm_mode in ("timeout", "predict_timeout"):
+            work = work + TIMER_COST
+        if pol.compute_mode == "andante":
+            work = work + PMU_COST
+
+        # ---- compute P-state ----
+        if pol.compute_mode == "max":
+            f_comp = np.full(n, fmax)
+        elif pol.compute_mode == "min":
+            f_comp = np.full(n, fmin)
+        else:                                           # andante
+            pred_w = last_comp[site]
+            pred_s = last_slack[site]
+            have = ~np.isnan(pred_w) & ~np.isnan(pred_s) & (pred_w > 0)
+            # lowest f with W*slow(f) <= W + S  ->  f >= fmax / (1 + S/(W*beta))
+            with np.errstate(divide="ignore", invalid="ignore"):
+                f_req = fmax / (1.0 + pred_s / (pred_w * max(wl.beta_comp, 1e-9)))
+            idx = np.searchsorted(grid, np.nan_to_num(f_req, nan=fmax))
+            idx = np.clip(idx, 0, len(grid) - 1)
+            f_comp = np.where(have, grid[idx], fmax)
+
+        d_comp, e_comp, ell = _phase(hw, work, wl.beta_comp, f_comp, ell, hw.act_comp)
+        energy += e_comp
+        tcomp += float(d_comp.sum())
+        arrival = t + d_comp
+
+        # ---- barrier resolution ----
+        if wl.is_p2p[k]:
+            partner = wl.partner[k]
+            t_bar = np.maximum(arrival, arrival[partner])
+        else:
+            t_bar = np.full(n, arrival.max())
+        slack = t_bar - arrival
+        tslack += float(slack.sum())
+
+        # ---- slack trajectory ----
+        if pol.comm_mode == "pin_min":                  # minfreq: already low
+            armed = np.zeros(n, dtype=bool)
+            t_hi = np.zeros(n)
+            f_slack_hi = np.full(n, fmin)
+        elif pol.comm_mode == "timeout":
+            armed = np.ones(n, dtype=bool)
+            t_hi = np.minimum(slack, theta_eff)
+            f_slack_hi = f_comp
+        elif pol.comm_mode == "predict_timeout":        # fermata
+            armed = np.nan_to_num(last_comm[site], nan=0.0) >= 2.0 * pol.theta
+            t_hi = np.where(armed, np.minimum(slack, theta_eff), slack)
+            f_slack_hi = f_comp
+        else:                                           # none
+            armed = np.zeros(n, dtype=bool)
+            t_hi = slack
+            f_slack_hi = f_comp
+        t_lo = slack - t_hi
+        energy += hw.watts(f_slack_hi, hw.act_slack) * t_hi
+        energy += hw.watts(fmin, hw.act_slack) * t_lo
+        exploited += float(t_lo.sum())
+        exploited_slack += float(t_lo.sum())
+        if pol.comm_mode == "pin_min":
+            exploited += float(slack.sum())
+            exploited_slack += float(slack.sum())
+
+        # ---- copy phase ----
+        wc = float(wl.copy[k])
+        jit = wl.copy_jitter[k] if wl.copy_jitter is not None else 1.0
+        if wc > 0.0:
+            wc_r = np.full(n, wc) * jit
+            if pol.comm_mode == "pin_min":
+                d_copy, e_copy, _ = _phase(
+                    hw, wc_r, wl.beta_copy, np.full(n, fmin),
+                    np.zeros(n), hw.act_copy,
+                )
+                t_min_in_copy = d_copy
+            elif pol.comm_mode in ("timeout", "predict_timeout") and pol.comm_scope == "comm":
+                # timer keeps running inside the MPI call: after theta_eff
+                # total in-call time, frequency drops; copy may start below it
+                t_to_fire = np.where(armed, np.maximum(theta_eff - slack, 0.0), np.inf)
+                d_copy, e_copy, t_min_in_copy = _two_rate_phase(
+                    hw, wc_r, wl.beta_copy, t_to_fire, fmax, hw.act_copy
+                )
+                # restore at MPI exit pins the next phase start at f_min
+                ell = np.where(t_min_in_copy > 0, lat, ell)
+            else:
+                # slack scope: frequency restored at barrier exit; commit
+                # latency pins the start of the copy at f_min
+                ell = np.where(t_lo > 0, lat, ell)
+                d_copy, e_copy, ell = _phase(
+                    hw, wc_r, wl.beta_copy, np.full(n, fmax),
+                    ell, hw.act_copy,
+                )
+                t_min_in_copy = np.minimum(d_copy, np.where(t_lo > 0, lat, 0.0))
+            energy += e_copy
+            tcopy += float(d_copy.sum())
+            exploited += float(np.sum(t_min_in_copy))
+            t = t_bar + d_copy
+        else:
+            # pure synchronization primitive: restore pins next compute
+            if pol.comm_scope == "slack" or pol.comm_mode in ("timeout", "predict_timeout"):
+                ell = np.where(t_lo > 0, lat, ell)
+            t = t_bar
+
+        # ---- table updates (what the runtime could actually measure) ----
+        if pol.comm_mode == "predict_timeout":
+            last_comm[site] = (t - arrival)             # slack + copy
+        if pol.compute_mode == "andante":
+            last_comp[site] = work
+            last_slack[site] = slack
+
+        if collect_trace:
+            trace_comp[k] = d_comp
+            trace_slack[k] = slack
+            trace_copy[k] = t - t_bar
+
+    res = SimResult(
+        name=pol.name,
+        time=float(t.max()),
+        energy=float(energy.sum()),
+        tcomp=tcomp,
+        tslack=tslack,
+        tcopy=tcopy,
+        exploited=exploited,
+        exploited_slack=exploited_slack,
+        calls=t_tasks,
+    )
+    trace = (
+        TraceRecord(wl.site, wl.is_p2p, wl.nbytes, trace_comp, trace_slack, trace_copy)
+        if collect_trace
+        else None
+    )
+    return res, trace
+
+
+# --------------------------------------------------------------------------
+# trace-analysis mode (paper Table 2): coverage each policy achieves on the
+# *baseline* trace, without timing feedback.
+# --------------------------------------------------------------------------
+
+def coverage_on_trace(trace: TraceRecord, pol: Policy, hw: HwModel = DEFAULT_HW) -> float:
+    """Fraction [%] of total rank-time the policy would run at f_min."""
+    theta_eff = pol.theta + 0.5 * hw.switch_latency
+    slack, copy = trace.slack, trace.copy
+    total = trace.comp.sum() + slack.sum() + copy.sum()
+    n_sites = int(trace.site.max()) + 1
+    n = slack.shape[1]
+    if pol.comm_mode == "pin_min":
+        return 100.0 * (slack.sum() + copy.sum() + trace.comp.sum()) / total
+    if pol.comm_mode == "timeout":
+        low_slack = np.maximum(slack - theta_eff, 0.0)
+        if pol.comm_scope == "slack":
+            return 100.0 * low_slack.sum() / total
+        comm = slack + copy
+        low = np.maximum(comm - theta_eff, 0.0)
+        return 100.0 * low.sum() / total
+    if pol.comm_mode == "predict_timeout":
+        last = np.full((n_sites, n), np.nan)
+        low_total = 0.0
+        for k in range(slack.shape[0]):
+            site = int(trace.site[k])
+            comm = slack[k] + copy[k]
+            armed = np.nan_to_num(last[site], nan=0.0) >= 2.0 * pol.theta
+            low_total += np.where(armed, np.maximum(comm - theta_eff, 0.0), 0.0).sum()
+            last[site] = comm
+        return 100.0 * low_total / total
+    return 0.0

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships three pieces (per repo convention):
+  <name>.py - the pl.pallas_call with explicit BlockSpec VMEM tiling,
+  ops.py    - jit'd dispatch wrappers (interpret=True on CPU hosts),
+  ref.py    - the pure-jnp oracle the tests assert against.
+
+The COUNTDOWN Slack paper itself contributes no compute kernel (it is a
+power-management runtime); these kernels cover the hot spots of the
+framework the technique is embedded in: attention (flash, causal/banded/
+GQA), RMSNorm, the Mamba-2 SSD chunked scan, and the RG-LRU linear
+recurrence.
+"""

@@ -1,0 +1,117 @@
+"""Flash attention (blockwise online-softmax) Pallas kernel.
+
+TPU mapping: grid = (batch, q_heads, q_blocks, k_blocks) with the LAST grid
+dimension sequential on TPU, so the online-softmax state (m, l, acc) lives
+in VMEM scratch and is carried across k-blocks; the output tile is written
+on the final k-block.  Q/K/V tiles are MXU-aligned (block sizes multiples
+of 128 on the contracted/lane dims).  GQA folds the group into the q-head
+grid axis and maps k/v through ``h // group``.  Causal and sliding-window
+masks are applied from absolute block positions.
+
+Why this shape: on TPU the (Bq x D) @ (D x Bk) score tile and the
+(Bq x Bk) @ (Bk x D) value tile both hit the MXU; keeping m/l/acc in
+scratch makes HBM traffic O(S*D) instead of O(S^2).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  bq: int, bk: int, n_k_blocks: int):
+    j = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (Bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                # (Bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)                # (Bk, D)
+
+    s = q @ k.T                                        # (Bq, Bk) — MXU
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                # (Bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                             # (Bq, Bk)
+    corr = jnp.exp(m_prev - m_new)                     # (Bq, 1)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ v         # (Bq, D) — MXU
+    m_scr[...] = m_new
+
+    @pl.when(j == n_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D) with Hq % Hkv == 0 (GQA)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    pad_q = (-s) % bq
+    pad_k = (-s) % bk
+    if pad_q or pad_k:
+        # padded keys live at positions >= s; causal mask plus the padded
+        # q positions being discarded keeps results exact
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sq, sk = s + pad_q, s + pad_k
+    n_q, n_k = sq // bq, sk // bk
+    scale = 1.0 / math.sqrt(d)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            bq=bq, bk=bk, n_k_blocks=n_k,
+        ),
+        grid=(b, hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, h, i, j: (bi, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, h, i, j, g=group: (bi, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, h, i, j, g=group: (bi, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bi, h, i, j: (bi, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),          # m (running max)
+            pltpu.VMEM((bq, 1), jnp.float32),          # l (running denom)
+            pltpu.VMEM((bq, d), jnp.float32),          # acc (weighted values)
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :s]

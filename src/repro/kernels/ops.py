@@ -1,0 +1,47 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On a CPU host (this container) the kernels execute in interpret mode —
+the kernel body runs as traced JAX ops, validating BlockSpec indexing and
+numerics; on a TPU backend the same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rglru_scan import rglru_scan_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssd import ssd_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("eps", "row_block"))
+def rmsnorm(x, scale, eps: float = 1e-6, row_block: int = 256):
+    return rmsnorm_pallas(x, scale, eps=eps, row_block=row_block, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, a_log, b, c, chunk: int = 128):
+    return ssd_pallas(x, dt, a_log, b, c, chunk=chunk, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("chunk", "width_block"))
+def rglru_scan(a, b, h0, chunk: int = 64, width_block: int = 512):
+    return rglru_scan_pallas(
+        a, b, h0, chunk=chunk, width_block=width_block, interpret=_interpret()
+    )

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Deliberately the *simplest possible* implementations — sequential scans,
+materialized attention — no chunking tricks shared with the kernels.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *, causal: bool = True, window: int = 0,
+) -> jnp.ndarray:
+    """q: (B,Hq,S,D); k/v: (B,Hkv,S,D).  Materialized-scores attention."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, s, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) / math.sqrt(d)
+    pos = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window:
+        mask &= pos[None, :] > pos[:, None] - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def ssd_ref(
+    x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+    b: jnp.ndarray, c: jnp.ndarray,
+) -> jnp.ndarray:
+    """Sequential (per-step) SSD recurrence.  Shapes as ssd_pallas."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                     # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * a_log[None, :])     # (B,H)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, bt
+        )
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        b.transpose(1, 0, 2).astype(jnp.float32),
+        c.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+def rglru_scan_ref(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray) -> jnp.ndarray:
+    """Sequential h_t = a_t h_{t-1} + b_t.  a,b: (B,S,W); h0: (B,W)."""
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    xs = (a.transpose(1, 0, 2).astype(jnp.float32), b.transpose(1, 0, 2).astype(jnp.float32))
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return hs.transpose(1, 0, 2).astype(a.dtype)

@@ -1,0 +1,73 @@
+"""RG-LRU linear-recurrence Pallas kernel: h_t = a_t * h_{t-1} + b_t.
+
+TPU mapping: grid = (batch, width_blocks, time_chunks) — time is the LAST
+(sequential) grid axis so the hidden state (one (1, BW) VREG-friendly row)
+persists in VMEM scratch across chunks.  The recurrence is elementwise over
+the width lanes (VPU, not MXU); within a chunk a ``fori_loop`` steps time,
+which on TPU pipelines loads from the VMEM tile.  Width blocks of 512-1024
+lanes keep the tile well-shaped (8x128 packing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, h_scr, *, q: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)     # (1, BW) -> (BW,)
+
+    a = a_ref[0].astype(jnp.float32)                   # (Q, BW)
+    b = b_ref[0].astype(jnp.float32)                   # (Q, BW)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        y_ref[0, t] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, q, step, h_scr[...])
+    h_scr[...] = h
+
+
+def rglru_scan_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    h0: jnp.ndarray,
+    *,
+    chunk: int = 64,
+    width_block: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """a, b: (B, S, W); h0: (B, W).  Returns h: (B, S, W)."""
+    bsz, s, w = a.shape
+    q = min(chunk, s)
+    bw = min(width_block, w)
+    pad_s = (-s) % q
+    pad_w = (-w) % bw
+    if pad_s or pad_w:
+        a = jnp.pad(a, ((0, 0), (0, pad_s), (0, pad_w)))
+        b = jnp.pad(b, ((0, 0), (0, pad_s), (0, pad_w)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_w)))
+    sp, wp = s + pad_s, w + pad_w
+
+    y = pl.pallas_call(
+        functools.partial(_rglru_kernel, q=q),
+        grid=(bsz, wp // bw, sp // q),
+        in_specs=[
+            pl.BlockSpec((1, q, bw), lambda bi, wi, j: (bi, j, wi)),
+            pl.BlockSpec((1, q, bw), lambda bi, wi, j: (bi, j, wi)),
+            pl.BlockSpec((1, bw), lambda bi, wi, j: (bi, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, q, bw), lambda bi, wi, j: (bi, j, wi)),
+        out_shape=jax.ShapeDtypeStruct((bsz, sp, wp), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return y[:, :s, :w]

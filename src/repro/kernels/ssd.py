@@ -1,0 +1,107 @@
+"""Mamba-2 SSD (state-space duality) chunked-scan Pallas kernel.
+
+Recurrence: h_t = exp(dt_t * A) h_{t-1} + dt_t * x_t ⊗ b_t ;  y_t = h_t c_t.
+
+TPU mapping: grid = (batch*heads, n_chunks) — the chunk axis is the LAST
+(sequential) grid dimension, so the (N x P) inter-chunk state lives in VMEM
+scratch and is carried across chunks, exactly the paper-standard SSD
+decomposition: a (Q x Q) intra-chunk quadratic part (two MXU matmuls) plus
+a rank-N state pass.  Per step the kernel touches one (Q,P) x-tile, one
+(Q,N) b/c tile and the (N,P) state — all VMEM-resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *, q: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)                   # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)                 # (Q,)
+    a = a_ref[0].astype(jnp.float32)                   # ()  negative
+    b = b_ref[0].astype(jnp.float32)                   # (Q, N)
+    c = c_ref[0].astype(jnp.float32)                   # (Q, N)
+
+    la = dt * a                                        # (Q,) log-decay <= 0
+    cs = jnp.cumsum(la)                                # inclusive
+    xdt = x * dt[:, None]                              # (Q, P)
+
+    # ---- intra-chunk quadratic (MXU) ----
+    seg = cs[:, None] - cs[None, :]                    # (Qi, Qj)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (q, q), 1
+    )
+    dec = jnp.exp(jnp.where(mask, seg, NEG_INF))
+    cb = (c @ b.T) * dec                               # (Q, Q)
+    y = cb @ xdt                                       # (Q, P)
+
+    # ---- inter-chunk state contribution ----
+    state = state_scr[...]                             # (N, P)
+    y += (c * jnp.exp(cs)[:, None]) @ state            # (Q,N)@(N,P)
+
+    # ---- state update (xdt already carries the dt factor) ----
+    sdec = jnp.exp(cs[-1] - cs)                        # (Q,)
+    state_scr[...] = state * jnp.exp(cs[-1]) + (b * sdec[:, None]).T @ xdt
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_pallas(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a_log: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x: (B,S,H,P); dt: (B,S,H); a_log: (H,); b,c: (B,S,N) -> y (B,S,H,P)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // q
+
+    # (B,H,S,P) etc. so the (batch*head) grid axis is leading
+    xt = x.transpose(0, 2, 1, 3).reshape(bsz * h, sp, p)
+    dtt = dt.transpose(0, 2, 1).reshape(bsz * h, sp)
+    at = jnp.tile(a_log[None, :], (bsz, 1)).reshape(bsz * h)
+    bt = jnp.repeat(b[:, None], h, axis=1).reshape(bsz * h, sp, n)
+    ct = jnp.repeat(c[:, None], h, axis=1).reshape(bsz * h, sp, n)
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, q=q),
+        grid=(bsz * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda g, j: (g, j, 0)),
+            pl.BlockSpec((1, q), lambda g, j: (g, j)),
+            pl.BlockSpec((1,), lambda g, j: (g,)),
+            pl.BlockSpec((1, q, n), lambda g, j: (g, j, 0)),
+            pl.BlockSpec((1, q, n), lambda g, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda g, j: (g, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz * h, sp, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, at, bt, ct)
+    y = y.reshape(bsz, h, sp, p).transpose(0, 2, 1, 3)
+    return y[:, :s]

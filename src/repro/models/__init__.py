@@ -1,0 +1,17 @@
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "init_params",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "prefill",
+    "decode_step",
+]

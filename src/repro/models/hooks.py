@@ -1,0 +1,24 @@
+"""Activation-sharding hooks.
+
+The model code is distribution-agnostic; the dist layer installs a
+constraint function (``with_sharding_constraint`` under a mesh) keyed by a
+logical activation name.  Default is identity so models run anywhere.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+_CONSTRAIN: Optional[Callable[[jnp.ndarray, str], jnp.ndarray]] = None
+
+
+def install_constraint(fn: Optional[Callable[[jnp.ndarray, str], jnp.ndarray]]) -> None:
+    global _CONSTRAIN
+    _CONSTRAIN = fn
+
+
+def constrain(x: jnp.ndarray, name: str) -> jnp.ndarray:
+    if _CONSTRAIN is None:
+        return x
+    return _CONSTRAIN(x, name)

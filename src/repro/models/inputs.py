@@ -1,0 +1,83 @@
+"""Input specs and synthetic batch construction for every (arch × shape) cell.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins (no allocation) —
+the dry-run lowers against these.  ``make_batch`` materializes small real
+batches for smoke tests and examples.  Modality frontends (audio frames /
+vision patches) are stubs: precomputed prefix embeddings, per assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _token_len(cfg: ModelConfig, seq_len: int) -> int:
+    return seq_len - cfg.n_prefix
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, batch_override: int = 0) -> Dict[str, Any]:
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, _token_len(cfg, s)), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+    }
+    if cfg.n_prefix:
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_prefix, cfg.d_model), jnp.bfloat16
+        )
+    return specs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig, batch_override: int = 0) -> Dict[str, Any]:
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, _token_len(cfg, s)), jnp.int32)}
+    if cfg.n_prefix:
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_prefix, cfg.d_model), jnp.bfloat16
+        )
+    return specs
+
+
+def decode_inputs_specs(cfg: ModelConfig, shape: ShapeConfig, batch_override: int = 0):
+    b = batch_override or shape.global_batch
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return token, pos
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, batch_override: int = 0) -> Dict[str, Any]:
+    """Shape-spec pytree for the step function of this cell's kind."""
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape, batch_override)
+    if shape.kind == "prefill":
+        return prefill_batch_specs(cfg, shape, batch_override)
+    token, pos = decode_inputs_specs(cfg, shape, batch_override)
+    return {"token": token, "pos": pos}
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq_len: int, seed: int = 0,
+               kind: str = "train") -> Dict[str, Any]:
+    """Materialized synthetic batch (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    tl = _token_len(cfg, seq_len)
+    out: Dict[str, Any] = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, tl)), jnp.int32)
+    }
+    if cfg.n_prefix:
+        out["prefix_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (batch, cfg.n_prefix, cfg.d_model)), jnp.float32
+        )
+    if kind == "train":
+        out["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq_len)), jnp.int32)
+        mask = np.ones((batch, seq_len), np.float32)
+        mask[:, : cfg.n_prefix] = 0.0
+        out["mask"] = jnp.asarray(mask)
+    return out

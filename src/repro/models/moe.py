@@ -1,0 +1,94 @@
+"""Top-k mixture-of-experts FFN with capacity-based scatter/gather dispatch.
+
+GShard-style semantics (top-k routing, capacity factor, load-balance aux
+loss) but implemented with scatter/gather instead of giant one-hot einsums so
+the dispatch buffers stay O(E * C * d) — the variant that actually fits on a
+16 GB v5e chip.  Token routing skew is exactly the "rank imbalance" the
+paper's slack mechanism exploits at the all-to-all (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def init_moe(cfg, key, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    return {
+        "router": (jax.random.normal(kr, (d, e)) * s_in).astype(jnp.float32),
+        "w1": (jax.random.normal(k1, (e, d, f)) * s_in).astype(dtype),
+        "w3": (jax.random.normal(k2, (e, d, f)) * s_in).astype(dtype),
+        "w2": (jax.random.normal(k3, (e, f, d)) * s_out).astype(dtype),
+    }
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    c = int(math.ceil(cfg.top_k * n_tokens / cfg.n_experts * cfg.capacity_factor))
+    return max(c, cfg.top_k)
+
+
+def moe_forward(
+    cfg, p: Params, x: jnp.ndarray, cap_override: int = 0
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d) -> (out (B,S,d), aux load-balance loss scalar).
+
+    ``cap_override`` sets an explicit capacity; decode passes T for a
+    dropless (exact top-k) path, which is the serving-correct behaviour.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])            # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # ---- load-balance auxiliary loss (Switch/GShard) ----
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    # ---- position-in-expert via running count (token order priority) ----
+    flat_e = gate_idx.reshape(-1)                              # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # (T*k,E)
+    pos_all = jnp.cumsum(onehot, axis=0) - 1                   # (T*k,E)
+    my_pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+    cap = cap_override or capacity(cfg, t)
+    keep = my_pos < cap
+
+    # dropped assignments go to a trash expert row e (scatter stays static)
+    dest_e = jnp.where(keep, flat_e, e)
+    dest_c = jnp.where(keep, my_pos, 0)
+    tok_of = jnp.arange(t * k, dtype=jnp.int32) // k
+    xd = jnp.take(xf, tok_of, axis=0)                          # (T*k,d)
+
+    buf = jnp.zeros((e + 1, cap, d), xf.dtype)
+    buf = buf.at[dest_e, dest_c].add(xd)
+    buf = buf[:e]                                              # (E,C,d)
+
+    # ---- expert computation (SwiGLU) ----
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    act = jax.nn.silu(h) * g
+    out_buf = jnp.einsum("ecf,efd->ecd", act, p["w2"])         # (E,C,d)
+
+    # ---- combine ----
+    safe_pos = jnp.where(keep, my_pos, 0)
+    gathered = out_buf[jnp.where(keep, flat_e, 0), safe_pos]   # (T*k,d)
+    w = (gate_vals.reshape(-1) * keep.astype(jnp.float32)).astype(xf.dtype)
+    out = jnp.sum((gathered * w[:, None]).reshape(t, k, d), axis=1)
+    return out.reshape(b, s, d), aux

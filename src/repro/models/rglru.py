@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ u_t)
+a_t = exp(-c * softplus(Λ) * r_t),  r/i = input-dependent sigmoid gates.
+
+Training uses an associative scan (log-depth); decode is a single-step
+update.  The Pallas kernel (``repro.kernels.rglru_scan``) mirrors the
+sequential semantics and is validated against ``linear_scan`` here.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Any]
+
+
+def init_rglru(cfg, key, dtype) -> Params:
+    d, w = cfg.d_model, cfg.lru_width
+    kg, ki, kc, kr, kii, klam, ko = jax.random.split(key, 7)
+    s_d = 1.0 / math.sqrt(d)
+    s_w = 1.0 / math.sqrt(w)
+    return {
+        "w_gelu": (jax.random.normal(kg, (d, w)) * s_d).astype(dtype),
+        "w_in": (jax.random.normal(ki, (d, w)) * s_d).astype(dtype),
+        "conv_w": (jax.random.normal(kc, (cfg.ssm_conv, w)) * 0.1).astype(dtype),
+        "w_r": (jax.random.normal(kr, (w, w)) * s_w).astype(dtype),
+        "w_i": (jax.random.normal(kii, (w, w)) * s_w).astype(dtype),
+        # softplus(lam) ~ U[2.5, 4.3] -> a^c in a useful range (Griffin init)
+        "lam": jax.random.uniform(klam, (w,), jnp.float32, minval=2.5, maxval=4.3),
+        "w_out": (jax.random.normal(ko, (w, d)) * s_w).astype(dtype),
+    }
+
+
+def linear_scan(a: jnp.ndarray, b: jnp.ndarray, h0: Optional[jnp.ndarray] = None):
+    """h_t = a_t * h_{t-1} + b_t along axis 1.  a,b: (B,S,W) fp32.
+
+    Returns (h (B,S,W), final_state (B,W)).
+    """
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def _gates(cfg, p, u):
+    r = jax.nn.sigmoid(u @ p["w_r"])
+    i = jax.nn.sigmoid(u @ p["w_i"])
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_forward(cfg, p: Params, x: jnp.ndarray, state: Optional[Params] = None):
+    """x: (B,S,d) -> (out, new_state|None)."""
+    from repro.models.ssm import causal_depthwise_conv
+
+    g = jax.nn.gelu(x @ p["w_gelu"])
+    u = x @ p["w_in"]
+    if state is not None:
+        u_full = jnp.concatenate([state["conv"].astype(u.dtype), u], axis=1)
+        u_conv = causal_depthwise_conv(u_full, p["conv_w"])[:, cfg.ssm_conv - 1 :]
+    else:
+        u_conv = causal_depthwise_conv(u, p["conv_w"])
+    a, b = _gates(cfg, p, u_conv)
+    h0 = state["h"] if state is not None else None
+    h, h_last = linear_scan(a, b, h0)
+    out = (g.astype(jnp.float32) * h).astype(x.dtype) @ p["w_out"]
+    if state is None:
+        return out, None
+    new_conv = jnp.concatenate([state["conv"], u], axis=1)[:, -(cfg.ssm_conv - 1) :]
+    return out, {"conv": new_conv, "h": h_last}
+
+
+def init_rglru_state(cfg, batch: int, dtype) -> Params:
+    w = cfg.lru_width
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_decode(cfg, p: Params, x: jnp.ndarray, state: Params):
+    """Single-token step.  x: (B,1,d)."""
+    g = jax.nn.gelu(x[:, 0] @ p["w_gelu"])                     # (B,W)
+    u = x[:, 0] @ p["w_in"]
+    window = jnp.concatenate([state["conv"].astype(u.dtype), u[:, None]], axis=1)
+    u_conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"])
+    a, b = _gates(cfg, p, u_conv)
+    h = a * state["h"] + b                                     # (B,W)
+    out = ((g.astype(jnp.float32) * h).astype(x.dtype) @ p["w_out"])[:, None]
+    return out, {"conv": window[:, 1:].astype(state["conv"].dtype), "h": h}

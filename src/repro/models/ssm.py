@@ -1,0 +1,200 @@
+"""Mamba-2 (SSD — state-space duality) block, pure-JAX chunked implementation.
+
+The chunked algorithm here is the oracle the Pallas SSD kernel
+(``repro.kernels.ssd``) is validated against: within-chunk quadratic
+(C B^T ⊙ decay) x, cross-chunk linear state recurrence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+def init_ssm(cfg, key, dtype) -> Params:
+    d = cfg.d_model
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    kin, kconv, kA, kdt, kout, knorm = jax.random.split(key, 6)
+    d_in_proj = 2 * di + 2 * n + h          # z, x, B, C, dt
+    conv_ch = di + 2 * n
+    return {
+        "w_in": (jax.random.normal(kin, (d, d_in_proj)) / math.sqrt(d)).astype(dtype),
+        "conv_w": (jax.random.normal(kconv, (cfg.ssm_conv, conv_ch)) * 0.1).astype(dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(kA, (h,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        "dt_bias": jax.random.uniform(kdt, (h,), jnp.float32, minval=-4.0, maxval=-1.0),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "w_out": (jax.random.normal(kout, (di, d)) / math.sqrt(di)).astype(dtype),
+    }
+
+
+def causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,C); w: (K,C).  y_t = sum_i w_i * x_{t-K+1+i} (causal)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    s = x.shape[1]
+    for i in range(k):
+        out = out + pad[:, i : i + s] * w[i]
+    return out
+
+
+def _split_proj(cfg, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xin = zxbcdt[..., di : 2 * di]
+    b = zxbcdt[..., 2 * di : 2 * di + n]
+    c = zxbcdt[..., 2 * di + n : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xin, b, c, dt
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int, init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); a_log: (H,) (negative A);
+    b, c: (B,S,N) (single group).  Returns (y (B,S,H,P), state (B,H,P,N)).
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t * x_t ⊗ b_t ;  y_t = h_t c_t
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // q
+    xq = x.reshape(bsz, nc, q, h, p)
+    dtq = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bq = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cq = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    la = dtq * a_log[None, None, None, :]                      # (B,nc,Q,H) <= 0
+    cs = jnp.cumsum(la, axis=2)                                # inclusive cumsum
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]          # (B,nc,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    seg = jnp.where(mask[None, None, :, :, None], seg, NEG_INF)
+    dec = jnp.exp(seg)
+    cb = jnp.einsum("bcin,bcjn->bcij", cq, bq)                 # (B,nc,Qi,Qj)
+    xdt = xq.astype(jnp.float32) * dtq[..., None]              # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, dec, xdt)
+
+    # ---- per-chunk final states ----
+    sdec = jnp.exp(cs[:, :, -1:, :] - cs)                      # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bq, sdec, xdt)
+
+    # ---- inter-chunk recurrence ----
+    chunk_dec = jnp.exp(cs[:, :, -1, :])                       # (B,nc,H)
+    h0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+
+    def body(carry, inp):
+        dec_c, s_c = inp                                       # (B,H), (B,H,P,N)
+        new = carry * dec_c[:, :, None, None] + s_c
+        return new, carry                                      # emit state *before* chunk
+
+    if nc <= 64:
+        # unrolled: XLA cost_analysis counts while bodies once (roofline).
+        # Only this tiny elementwise recurrence lives in the loop — the
+        # quadratic intra-chunk einsums above are vectorized over chunks —
+        # so falling back to lax.scan beyond 64 chunks costs ~nothing in
+        # cost-analysis accuracy while keeping HLO size bounded.
+        carry, prev_list = h0, []
+        for ci in range(nc):
+            carry, prev = body(carry, (chunk_dec[:, ci], s_chunk[:, ci]))
+            prev_list.append(prev)
+        final = carry
+        prevs = jnp.stack(prev_list, axis=1)                   # (B,nc,H,P,N)
+    else:
+        final, prevs = lax.scan(
+            body, h0, (chunk_dec.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4))
+        )
+        prevs = prevs.transpose(1, 0, 2, 3, 4)                 # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", cq, jnp.exp(cs), prevs)
+    y = (y_intra + y_inter).reshape(bsz, sp, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssm_forward(cfg, p: Params, x: jnp.ndarray, state: Optional[Params] = None):
+    """Full-sequence Mamba-2 block.  x: (B,S,d) -> (out, new_state|None)."""
+    bsz, s, _ = x.shape
+    di, n, h, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_d_head
+    zxbcdt = x @ p["w_in"]
+    z, xin, b, c, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)
+    if state is not None:
+        conv_in_full = jnp.concatenate([state["conv"].astype(conv_in.dtype), conv_in], axis=1)
+        conv_out = causal_depthwise_conv(conv_in_full, p["conv_w"])[:, cfg.ssm_conv - 1 :]
+    else:
+        conv_out = causal_depthwise_conv(conv_in, p["conv_w"])
+    conv_out = jax.nn.silu(conv_out)
+    xin, b, c = conv_out[..., :di], conv_out[..., di : di + n], conv_out[..., di + n :]
+    xh = xin.reshape(bsz, s, h, ph)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_log = -jnp.exp(p["A_log"])
+    init_ssm_state = state["h"] if state is not None else None
+    y, final = ssd_chunked(xh, dtv, a_log, b, c, cfg.ssm_chunk, init_ssm_state)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, di)
+    # gated RMSNorm (Mamba-2): norm(y * silu(z))
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    y = y * lax.rsqrt(jnp.mean(jnp.square(y), axis=-1, keepdims=True) + 1e-6)
+    y = (y * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["w_out"]
+    if state is None:
+        return out, None
+    new_conv = jnp.concatenate([state["conv"], conv_in], axis=1)[:, -(cfg.ssm_conv - 1) :]
+    return out, {"conv": new_conv, "h": final}
+
+
+def init_ssm_state(cfg, batch: int, dtype) -> Params:
+    di, n, h, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_d_head
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), dtype),
+        "h": jnp.zeros((batch, h, ph, n), jnp.float32),
+    }
+
+
+def ssm_decode(cfg, p: Params, x: jnp.ndarray, state: Params):
+    """Single-token step.  x: (B,1,d) -> (out (B,1,d), new_state)."""
+    bsz = x.shape[0]
+    di, n, h, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_d_head
+    zxbcdt = x[:, 0] @ p["w_in"]                               # (B, ...)
+    z, xin, b, c, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)            # (B,C)
+    window = jnp.concatenate([state["conv"].astype(conv_in.dtype), conv_in[:, None]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"])
+    conv_out = jax.nn.silu(conv_out)
+    xin, b, c = conv_out[..., :di], conv_out[..., di : di + n], conv_out[..., di + n :]
+    xh = xin.reshape(bsz, h, ph).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dtv * (-jnp.exp(p["A_log"])))                  # (B,H)
+    hs = state["h"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, xh, b.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", c.astype(jnp.float32), hs)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(bsz, di) * jax.nn.silu(z.astype(jnp.float32))
+    y = y * lax.rsqrt(jnp.mean(jnp.square(y), axis=-1, keepdims=True) + 1e-6)
+    y = (y * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = (y @ p["w_out"])[:, None]
+    new_conv = window[:, 1:].astype(state["conv"].dtype)
+    return out, {"conv": new_conv, "h": hs}

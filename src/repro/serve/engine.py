@@ -1,0 +1,71 @@
+"""Batched serving engine: prefill/decode step builders + a simple scheduler.
+
+``make_serve_steps`` produces the jit-able ``prefill_step`` and
+``decode_step`` the dry-run lowers for the ``prefill_*`` / ``decode_*`` /
+``long_*`` shape cells.  ``ServeEngine`` drives real batched generation on
+this container (greedy or temperature sampling) for the examples/tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import decode_step as _decode
+from repro.models.transformer import init_cache, prefill as _prefill
+
+
+def make_serve_steps(cfg) -> Tuple[Callable, Callable]:
+    """Returns (prefill_step(params, batch, cache), decode_step(params, token, pos, cache))."""
+
+    def prefill_step(params, batch, cache):
+        return _prefill(cfg, params, batch, cache)
+
+    def decode_step(params, token, pos, cache):
+        return _decode(cfg, params, token, pos, cache)
+
+    return prefill_step, decode_step
+
+
+@dataclass
+class ServeEngine:
+    cfg: Any
+    params: Any
+    max_len: int
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        self._prefill, self._decode = make_serve_steps(self.cfg)
+        self._prefill = jax.jit(self._prefill)
+        self._decode = jax.jit(self._decode)
+
+    def generate(
+        self,
+        batch: Dict[str, Any],
+        n_steps: int,
+        key: Optional[jax.Array] = None,
+    ) -> jnp.ndarray:
+        """Greedy/sampled continuation of ``batch['tokens']`` for n_steps."""
+        b, s = batch["tokens"].shape
+        prompt_len = s + self.cfg.n_prefix
+        cache = init_cache(self.cfg, b, self.max_len)
+        logits, cache = self._prefill(self.params, batch, cache)
+        out = []
+        tok = self._select(logits, key, 0)
+        out.append(tok)
+        for i in range(1, n_steps):
+            logits, cache = self._decode(
+                self.params, tok, jnp.int32(prompt_len + i - 1), cache
+            )
+            tok = self._select(logits, key, i)
+            out.append(tok)
+        return jnp.stack(out, axis=1)                          # (B, n_steps)
+
+    def _select(self, logits, key, i):
+        if self.temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        sub = jax.random.fold_in(key, i)
+        return jax.random.categorical(sub, logits / self.temperature).astype(jnp.int32)

@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward/train step on CPU, asserting output shapes + no NaNs (assignment
+requirement), plus prefill->decode consistency against full-sequence
+scoring for one arch per family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models import decode_step, init_cache, init_params, loss_fn, prefill
+from repro.models.inputs import make_batch
+from repro.models.transformer import forward, logits_fn, param_count
+
+SMOKE_ARCHS = [a for a in ARCHS]
+
+
+@pytest.mark.parametrize("arch", SMOKE_ARCHS)
+def test_train_step_smoke(arch, rng_key):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, rng_key)
+    assert param_count(params) > 0
+    batch = make_batch(cfg, batch=2, seq_len=32, kind="train")
+    loss, metrics = loss_fn(cfg, params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    grads = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert bool(jnp.all(jnp.isfinite(g))), f"{arch}: non-finite grad at {path}"
+
+
+@pytest.mark.parametrize("arch", SMOKE_ARCHS)
+def test_forward_shapes(arch, rng_key):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, rng_key)
+    batch = make_batch(cfg, batch=2, seq_len=32, kind="prefill")
+    hidden, aux = forward(cfg, params, batch)
+    assert hidden.shape == (2, 32, cfg.d_model)
+    logits = logits_fn(cfg, params, hidden[:, -1:])
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["llama3.2-1b", "mixtral-8x22b", "mamba2-130m", "recurrentgemma-2b",
+     "musicgen-large", "internvl2-1b", "olmo-1b"],
+)
+def test_prefill_decode_consistency(arch, rng_key):
+    cfg = reduced(get_config(arch))
+    if cfg.is_moe:
+        # dropless both paths so capacity dropping can't cause divergence
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts) / cfg.top_k)
+    params = init_params(cfg, rng_key)
+    b, s = 2, 24
+    pf = make_batch(cfg, batch=b, seq_len=s, kind="prefill")
+    extra = jnp.asarray(
+        np.random.default_rng(3).integers(0, cfg.vocab, (b, 3)), jnp.int32
+    )
+    cache = init_cache(cfg, batch=b, max_len=s + 8)
+    logits, cache = prefill(cfg, params, pf, cache)
+    assert logits.shape == (b, cfg.vocab)
+    for i in range(3):
+        full_tokens = jnp.concatenate([pf["tokens"], extra[:, : i + 1]], axis=1)
+        fb = {"tokens": full_tokens}
+        if "prefix_embeds" in pf:
+            fb["prefix_embeds"] = pf["prefix_embeds"]
+        hid, _ = forward(cfg, params, fb)
+        ref = logits_fn(cfg, params, hid[:, -1:])[:, 0]
+        logits, cache = decode_step(cfg, params, extra[:, i], jnp.int32(s + i), cache)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(ref), atol=2e-4, rtol=2e-3)
+
+
+def test_windowed_ring_cache_matches_full_history(rng_key):
+    """Decode beyond the window: ring cache must equal full-history windowed
+    attention (recurrentgemma local attention, window smaller than history)."""
+    cfg = reduced(get_config("recurrentgemma-2b"), window=16, n_layers=3)
+    params = init_params(cfg, rng_key)
+    b, s = 1, 20                                   # prompt longer than window
+    pf = make_batch(cfg, batch=b, seq_len=s, kind="prefill")
+    cache = init_cache(cfg, batch=b, max_len=64)
+    logits, cache = prefill(cfg, params, pf, cache)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, 6)), jnp.int32)
+    for i in range(6):
+        full_tokens = jnp.concatenate([pf["tokens"], toks[:, : i + 1]], axis=1)
+        hid, _ = forward(cfg, params, {"tokens": full_tokens})
+        ref = logits_fn(cfg, params, hid[:, -1:])[:, 0]
+        logits, cache = decode_step(cfg, params, toks[:, i], jnp.int32(s + i), cache)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(ref), atol=2e-4, rtol=2e-3)
+
+
+def test_param_count_analytic_close_to_actual(rng_key):
+    for arch in ["llama3.2-1b", "mamba2-130m", "mixtral-8x22b"]:
+        cfg = reduced(get_config(arch))
+        actual = param_count(init_params(cfg, rng_key))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.15, (arch, actual, analytic)
+
+
+def test_int8_kv_cache_decode_close_to_exact(rng_key):
+    """int8-quantized KV cache: logits within quantization tolerance and
+    greedy tokens unchanged vs the exact full-forward reference."""
+    import dataclasses
+
+    cfg = reduced(get_config("musicgen-large"))
+    cfgq = dataclasses.replace(cfg, kv_quant=True)
+    params = init_params(cfg, rng_key)
+    b, s = 2, 24
+    pf = make_batch(cfg, batch=b, seq_len=s, kind="prefill")
+    extra = jnp.asarray(
+        np.random.default_rng(5).integers(0, cfg.vocab, (b, 3)), jnp.int32
+    )
+    cache = init_cache(cfgq, batch=b, max_len=s + 8)
+    logits, cache = prefill(cfgq, params, pf, cache)
+    for i in range(3):
+        full_tokens = jnp.concatenate([pf["tokens"], extra[:, : i + 1]], axis=1)
+        hid, _ = forward(cfg, params, {"tokens": full_tokens,
+                                       "prefix_embeds": pf["prefix_embeds"]})
+        ref = logits_fn(cfg, params, hid[:, -1:])[:, 0]
+        logits, cache = decode_step(cfgq, params, extra[:, i], jnp.int32(s + i), cache)
+        assert float(jnp.max(jnp.abs(logits - ref))) < 0.15
+        assert bool(jnp.all(jnp.argmax(logits, -1) == jnp.argmax(ref, -1)))

@@ -1,0 +1,138 @@
+"""Distribution substrate: sharding rules, checkpoint manager semantics,
+elastic mesh, straggler detector, optimizer correctness."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.dist import sharding as SH
+from repro.dist.checkpoint import CheckpointManager
+from repro.dist.elastic import ElasticMesh, FailureInjector
+from repro.dist.straggler import StragglerDetector
+from repro.models.transformer import init_params
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state, schedule
+
+
+def test_sanitize_spec_drops_nondividing_axes():
+    # size-1 axes divide everything -> kept
+    mesh1 = jax.make_mesh((1,), ("data",))
+    assert SH.sanitize_spec(mesh1, P("data"), (7,)) == P("data")
+    # arithmetic check without multi-device hardware: fake axis sizes via
+    # the helper's own size lookup on a 1-device mesh is trivial, so check
+    # the pure function against a mesh-shaped namespace
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+
+    fm = FakeMesh()
+    assert SH.sanitize_spec(fm, P("data", "model"), (8, 6)) == P("data", "model")
+    assert SH.sanitize_spec(fm, P("data", "model"), (7, 6)) == P(None, "model")
+    assert SH.sanitize_spec(fm, P(("data", "model"), None), (16, 3)) == P(("data", "model"), None)
+    assert SH.sanitize_spec(fm, P(("data", "model"), None), (4, 3)) == P(None, None)
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_param_shardings_cover_every_leaf(arch, rng_key):
+    """Every parameter leaf gets a sharding whose axes divide its dims
+    (guaranteed by sanitize) — checked on a 1-device mesh for all archs."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(get_config(arch))
+    params = jax.eval_shape(lambda k: init_params(cfg, k), rng_key)
+    sh = SH.param_shardings(mesh, params)
+    n_leaves = len(jax.tree.leaves(params))
+    assert len(jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec"))) == n_leaves
+
+
+def test_matrix_params_are_2d_sharded_on_production_spec():
+    """On the production mesh spec, big matrices must shard both ways."""
+    cfg = reduced(get_config("llama3.2-1b"))
+    params = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    # fake mesh shape check via spec computation only (1-device mesh, but we
+    # inspect the *requested* spec before sanitize drops axes)
+    fsdp = ("data",)
+    spec = SH._param_spec("w1", 2, "data")
+    assert spec == P("data", "model")
+    spec = SH._param_spec("w2", 3, ("pod", "data"))
+    assert spec == P(None, "model", ("pod", "data"))
+
+
+def test_checkpoint_manager_gc_and_latest():
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for step in [1, 5, 9]:
+            mgr.save(step, tree)
+        assert mgr.all_steps() == [5, 9]          # step 1 garbage-collected
+        assert mgr.latest_step() == 9
+        step, restored = mgr.restore_latest(tree)
+        np.testing.assert_array_equal(restored["w"], tree["w"])
+
+
+def test_checkpoint_atomicity_no_tmp_left_behind():
+    tree = {"w": np.zeros((4,), np.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=3)
+        mgr.save(3, tree)
+        assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+
+def test_checkpoint_async_save():
+    tree = {"w": np.ones((8, 8), np.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, async_save=True)
+        mgr.save(1, tree)
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+
+def test_elastic_mesh_failure_and_rebuild():
+    em = ElasticMesh(axis_names=("data", "model"))
+    mesh = em.build(model_parallel=1)
+    n0 = int(np.prod(list(mesh.shape.values())))
+    injector = FailureInjector(fail_at_steps=[10], device_ids=[jax.devices()[0].id])
+    assert injector.check(9) is None
+    failed = injector.check(10)
+    assert failed is not None
+    em.fail(failed)
+    if n0 > 1:
+        mesh2 = em.build(model_parallel=1)
+        assert int(np.prod(list(mesh2.shape.values()))) == n0 - 1
+    else:
+        with pytest.raises(RuntimeError):
+            em.build()
+
+
+def test_straggler_detector_flags_slow_rank():
+    det = StragglerDetector(min_samples=5)
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        arrivals = {r: rng.normal(0, 0.01) for r in range(8)}
+        arrivals[3] = 0.5                         # rank 3 always last
+        det.observe_barrier(arrivals)
+    flagged = [r for r, z in det.stragglers()]
+    assert flagged == [3]
+
+
+def test_adamw_converges_on_quadratic():
+    opt_cfg = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=200,
+                        min_lr_ratio=1.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_opt_state(params, opt_cfg)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}            # d/dw ||w||^2
+        params, state, metrics = adamw_update(params, grads, state, opt_cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+    assert float(metrics["grad_norm"]) >= 0
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    s0 = float(schedule(cfg, jnp.int32(0)))
+    s10 = float(schedule(cfg, jnp.int32(10)))
+    s100 = float(schedule(cfg, jnp.int32(100)))
+    assert s0 < 0.2 and abs(s10 - 1.0) < 1e-6 and abs(s100 - 0.1) < 1e-3

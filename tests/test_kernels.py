@@ -1,0 +1,128 @@
+"""Per-kernel shape/dtype sweeps asserting allclose against the pure-jnp
+oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# rmsnorm
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 128), (3, 17, 256), (2, 5, 7, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = jnp.asarray(RNG.normal(0, 2, shape), dtype)
+    scale = jnp.asarray(RNG.normal(1, 0.2, shape[-1:]), dtype)
+    out = ops.rmsnorm(x, scale, row_block=8)
+    expect = ref.rmsnorm_ref(x, scale)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **_tol(dtype)
+    )
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,d,window",
+    [
+        (1, 4, 4, 64, 32, 0),       # MHA causal
+        (2, 8, 2, 96, 64, 0),       # GQA causal, non-multiple seq
+        (1, 4, 1, 128, 32, 0),      # MQA
+        (1, 4, 2, 128, 32, 48),     # sliding window
+    ],
+)
+def test_flash_attention(b, hq, hkv, s, d, window):
+    q = jnp.asarray(RNG.normal(0, 1, (b, hq, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, hkv, s, d)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=window, block_q=32, block_k=32)
+    expect = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5, rtol=2e-4)
+
+
+def test_flash_attention_bf16():
+    b, hq, hkv, s, d = 1, 4, 2, 64, 32
+    q = jnp.asarray(RNG.normal(0, 1, (b, hq, s, d)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(0, 1, (b, hkv, s, d)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(0, 1, (b, hkv, s, d)), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_flash_matches_model_layer_attention():
+    """The kernel semantics mirror the model's chunked XLA attention."""
+    from repro.models.layers import chunked_causal_attention
+
+    b, hkv, g, s, d = 1, 2, 3, 80, 32
+    q = jnp.asarray(RNG.normal(0, 1, (b, s, hkv, g, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, s, hkv, d)), jnp.float32)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    xla_out = chunked_causal_attention(q, k, v, pos, pos, kv_chunk=32)
+    qk = q.transpose(0, 2, 3, 1, 4).reshape(b, hkv * g, s, d)
+    pl_out = ops.flash_attention(
+        qk, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), block_q=32, block_k=32
+    )
+    pl_out = pl_out.reshape(b, hkv, g, s, d).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_allclose(np.asarray(pl_out), np.asarray(xla_out), atol=2e-5, rtol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# SSD (Mamba-2)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (100, 32), (32, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd(s, chunk, dtype):
+    b, h, p, n = 2, 3, 16, 8
+    x = jnp.asarray(RNG.normal(0, 1, (b, s, h, p)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.5, (b, s, h)), jnp.float32)
+    a_log = -jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    bb = jnp.asarray(RNG.normal(0, 1, (b, s, n)), dtype)
+    cc = jnp.asarray(RNG.normal(0, 1, (b, s, n)), dtype)
+    out = ops.ssd_scan(x, dt, a_log, bb, cc, chunk=chunk)
+    expect = ref.ssd_ref(x, dt, a_log, bb, cc)
+    tol = dict(atol=3e-1, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **tol
+    )
+
+
+# --------------------------------------------------------------------------
+# RG-LRU scan
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,w,chunk,wb", [(64, 96, 16, 32), (50, 64, 32, 64), (16, 128, 16, 128)])
+def test_rglru_scan(s, w, chunk, wb):
+    a = jnp.asarray(RNG.uniform(0.3, 0.999, (2, s, w)), jnp.float32)
+    b = jnp.asarray(RNG.normal(0, 0.3, (2, s, w)), jnp.float32)
+    h0 = jnp.asarray(RNG.normal(0, 1, (2, w)), jnp.float32)
+    out = ops.rglru_scan(a, b, h0, chunk=chunk, width_block=wb)
+    expect = ref.rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5, rtol=2e-4)
+
+
+def test_rglru_matches_model_associative_scan():
+    from repro.models.rglru import linear_scan
+
+    a = jnp.asarray(RNG.uniform(0.3, 0.999, (2, 40, 64)), jnp.float32)
+    b = jnp.asarray(RNG.normal(0, 0.3, (2, 40, 64)), jnp.float32)
+    h0 = jnp.asarray(RNG.normal(0, 1, (2, 64)), jnp.float32)
+    h_assoc, _ = linear_scan(a, b, h0)
+    h_pallas = ops.rglru_scan(a, b, h0, chunk=8, width_block=64)
+    np.testing.assert_allclose(np.asarray(h_pallas), np.asarray(h_assoc), atol=2e-5, rtol=2e-4)

@@ -1,0 +1,53 @@
+"""Random-forest predictor: regression quality, SMAPE, importance, dataset."""
+import numpy as np
+
+from repro.core.policies import BASELINE
+from repro.core.predictor import (
+    RandomForest, build_dataset, evaluate_predictability, smape,
+)
+from repro.core.simulator import simulate
+from repro.core.workloads import APPS, generate
+
+
+def test_smape_definition():
+    assert smape(np.array([1.0]), np.array([1.0])) == 0.0
+    assert abs(smape(np.array([3.0]), np.array([1.0])) - 50.0) < 1e-9
+
+
+def test_forest_beats_mean_baseline():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (2000, 5))
+    y = 3 * x[:, 0] - 2 * x[:, 1] ** 2 + 0.1 * rng.normal(size=2000)
+    rf = RandomForest(n_trees=8, seed=0).fit(x[:1500], y[:1500])
+    pred = rf.predict(x[1500:])
+    mse_rf = float(np.mean((pred - y[1500:]) ** 2))
+    mse_mean = float(np.mean((y[1500:].mean() - y[1500:]) ** 2))
+    assert mse_rf < 0.35 * mse_mean
+
+
+def test_dataset_prev_features_shift_history():
+    wl = generate(APPS["nas_mg.E.128"], seed=0)
+    _, trace = simulate(wl, BASELINE, collect_trace=True)
+    x0, y0, n0 = build_dataset(trace, with_prev=False, max_rows=5000)
+    x1, y1, n1 = build_dataset(trace, with_prev=True, max_rows=5000)
+    assert x0.shape[1] == 7 and x1.shape[1] == 10
+    assert len(n1) == 10 and n1[-3:] == ["prev_tcomp", "prev_tslack", "prev_tcopy"]
+    assert len(x1) <= len(x0)                    # first encounters dropped
+
+
+def test_prev_info_improves_tcomp_prediction():
+    wl = generate(APPS["nas_is.D.128"], seed=0)
+    _, trace = simulate(wl, BASELINE, collect_trace=True)
+    r_no = evaluate_predictability("is", trace, with_prev=False, n_trees=4)
+    r_yes = evaluate_predictability("is", trace, with_prev=True, n_trees=4)
+    assert r_yes.smape["tcomp"] < r_no.smape["tcomp"]    # paper Table 1 trend
+    assert all(0 <= v <= 100 for v in r_yes.smape.values())
+
+
+def test_permutation_importance_normalized():
+    wl = generate(APPS["nas_mg.E.128"], seed=0)
+    _, trace = simulate(wl, BASELINE, collect_trace=True)
+    r = evaluate_predictability("mg", trace, with_prev=True, n_trees=3, importance=True)
+    for tgt, imps in r.importance.items():
+        vals = list(imps.values())
+        assert max(vals) <= 1.0 + 1e-9 and min(vals) >= 0.0

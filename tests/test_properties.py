@@ -1,0 +1,164 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies import ALL_POLICIES, BASELINE, COUNTDOWN, COUNTDOWN_SLACK, MINFREQ, Policy
+from repro.core.pstate import HwModel
+from repro.core.simulator import Workload, coverage_on_trace, simulate
+from repro.dist.compression import _quantize
+
+
+def _workload(draw_comp, copy, n_ranks, n_tasks, p2p_mask, seed):
+    rng = np.random.default_rng(seed)
+    comp = np.asarray(draw_comp, dtype=np.float64).reshape(n_tasks, n_ranks)
+    partner = np.zeros((n_tasks, n_ranks), np.int64)
+    for k in range(n_tasks):
+        if p2p_mask[k]:
+            perm = rng.permutation(n_ranks).reshape(-1, 2)
+            p = np.zeros(n_ranks, np.int64)
+            p[perm[:, 0]] = perm[:, 1]
+            p[perm[:, 1]] = perm[:, 0]
+            partner[k] = p
+    return Workload(
+        name="prop", n_ranks=n_ranks, comp=comp,
+        copy=np.asarray(copy), is_p2p=np.asarray(p2p_mask, bool),
+        partner=partner, site=rng.integers(0, 4, n_tasks),
+        nbytes=np.ones(n_tasks), beta_comp=0.0, beta_copy=0.0,
+    )
+
+
+workloads = st.integers(min_value=0, max_value=10_000).flatmap(
+    lambda seed: st.tuples(
+        st.just(seed),
+        st.integers(min_value=2, max_value=4).map(lambda x: 2 * x),  # ranks (even)
+        st.integers(min_value=1, max_value=12),                      # tasks
+    )
+)
+
+
+@given(workloads)
+@settings(max_examples=40, deadline=None)
+def test_zero_beta_policies_never_slow_and_never_cost_energy(args):
+    """With beta=0 (memory-bound phases) frequency cannot change duration,
+    so every *reactive zero-overhead-cost* policy must preserve wall time
+    and use <= baseline energy."""
+    seed, n_ranks, n_tasks = args
+    rng = np.random.default_rng(seed)
+    comp = rng.uniform(1e-4, 5e-3, (n_tasks, n_ranks))
+    copy = rng.uniform(0.0, 2e-3, n_tasks)
+    p2p = rng.random(n_tasks) < 0.4
+    wl = _workload(comp, copy, n_ranks, n_tasks, p2p, seed)
+    base, _ = simulate(wl, BASELINE)
+    # reactive policies still pay the tiny timer-arming cost per call; the
+    # invariant is: no slowdown/energy beyond that fixed cost
+    from repro.core.pstate import DEFAULT_HW
+    from repro.core.simulator import TIMER_COST
+
+    slack_budget_t = n_tasks * TIMER_COST * 2          # generous
+    slack_budget_e = slack_budget_t * n_ranks * DEFAULT_HW.watts_at_fmax
+    pure_cntds = Policy("p", comm_mode="timeout", comm_scope="slack", theta=500e-6)
+    pure_cntd = Policy("p2", comm_mode="timeout", comm_scope="comm", theta=500e-6)
+    for pol in (pure_cntds, pure_cntd, MINFREQ):
+        res, _ = simulate(wl, pol)
+        assert res.time <= base.time + slack_budget_t
+        assert res.energy <= base.energy + slack_budget_e
+
+
+@given(workloads)
+@settings(max_examples=40, deadline=None)
+def test_slack_nonnegative_and_critical_rank_exists(args):
+    seed, n_ranks, n_tasks = args
+    rng = np.random.default_rng(seed)
+    comp = rng.uniform(1e-4, 5e-3, (n_tasks, n_ranks))
+    copy = rng.uniform(0.0, 2e-3, n_tasks)
+    p2p = rng.random(n_tasks) < 0.4
+    wl = _workload(comp, copy, n_ranks, n_tasks, p2p, seed)
+    _, trace = simulate(wl, BASELINE, collect_trace=True)
+    assert np.all(trace.slack >= -1e-12)
+    # every synchronization has at least one zero-slack (critical) member
+    for k in range(n_tasks):
+        if p2p[k]:
+            continue
+        assert trace.slack[k].min() <= 1e-9
+
+
+@given(
+    st.integers(min_value=0, max_value=10_000),
+    st.floats(min_value=1e-4, max_value=5e-3),
+    st.floats(min_value=1.2, max_value=4.0),
+)
+@settings(max_examples=30, deadline=None)
+def test_timeout_monotone_in_theta(seed, theta1, factor):
+    """A longer timeout can never exploit MORE time (filter monotonicity)."""
+    theta2 = theta1 * factor
+    rng = np.random.default_rng(seed)
+    n_tasks, n_ranks = 10, 6
+    comp = rng.uniform(1e-4, 8e-3, (n_tasks, n_ranks))
+    copy = rng.uniform(0.0, 3e-3, n_tasks)
+    wl = _workload(comp, copy, n_ranks, n_tasks, np.zeros(n_tasks, bool), seed)
+    _, trace = simulate(wl, BASELINE, collect_trace=True)
+    for scope in ("slack", "comm"):
+        c1 = coverage_on_trace(trace, Policy("a", comm_mode="timeout", comm_scope=scope, theta=theta1))
+        c2 = coverage_on_trace(trace, Policy("b", comm_mode="timeout", comm_scope=scope, theta=theta2))
+        assert c2 <= c1 + 1e-9
+
+
+@given(workloads)
+@settings(max_examples=30, deadline=None)
+def test_coverage_nesting(args):
+    """slack-scope <= comm-scope <= minfreq coverage on any trace."""
+    seed, n_ranks, n_tasks = args
+    rng = np.random.default_rng(seed)
+    comp = rng.uniform(1e-4, 8e-3, (n_tasks, n_ranks))
+    copy = rng.uniform(0.0, 3e-3, n_tasks)
+    p2p = rng.random(n_tasks) < 0.3
+    wl = _workload(comp, copy, n_ranks, n_tasks, p2p, seed)
+    _, trace = simulate(wl, BASELINE, collect_trace=True)
+    c_s = coverage_on_trace(trace, COUNTDOWN_SLACK)
+    c_c = coverage_on_trace(trace, COUNTDOWN)
+    c_m = coverage_on_trace(trace, MINFREQ)
+    assert -1e-9 <= c_s <= c_c + 1e-9 <= c_m + 2e-9 <= 100 + 1e-6
+
+
+@given(
+    st.lists(
+        st.floats(min_value=-1e6, max_value=1e6, allow_nan=False, width=32),
+        min_size=1, max_size=64,
+    )
+)
+@settings(max_examples=60, deadline=None)
+def test_int8_quantization_error_bound(values):
+    """Gradient compression: roundtrip error <= 1 LSB = max|g|/127."""
+    import jax.numpy as jnp
+
+    g = jnp.asarray(np.asarray(values, np.float32))
+    q, scale = _quantize(g)
+    err = np.abs(np.asarray(q, np.float32) * float(scale) - np.asarray(g))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=20, deadline=None)
+def test_checkpoint_roundtrip(seed):
+    import os
+    import tempfile
+
+    import jax
+
+    from repro.dist.checkpoint import CheckpointManager
+
+    rng = np.random.default_rng(seed)
+    tree = {
+        "a": rng.normal(size=(3, 5)).astype(np.float32),
+        "b": {"c": rng.integers(0, 10, (4,)).astype(np.int32),
+              "d": [rng.normal(size=(2, 2)).astype(np.float32)]},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        mgr.save(seed % 7, tree)
+        step, restored = mgr.restore_latest(tree)
+        assert step == seed % 7
+        flat_a = jax.tree.leaves(tree)
+        flat_b = jax.tree.leaves(restored)
+        for x, y in zip(flat_a, flat_b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
