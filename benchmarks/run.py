@@ -9,6 +9,7 @@ full JSON artifacts under artifacts/.
   fig3    — permutation feature importance (paper Fig. 3)
   roofline— 3-term roofline per (arch x shape x mesh) from dry-run artifacts
   runtime — framework micro-benchmarks (simulator/governor/barrier cost)
+  dist    — distribution substrate (int8 compressed_psum, straggler detector)
 
 ``python -m benchmarks.run [--only table3,roofline] [--full]``
 """
@@ -26,6 +27,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        bench_dist,
         bench_runtime,
         fig3_feature_importance,
         roofline,
@@ -38,6 +40,7 @@ def main() -> None:
         "table2": table2_slack_isolation.run,
         "table3": table3_runtime_comparison.run,
         "runtime": bench_runtime.run,
+        "dist": bench_dist.run,
         "table1": table1_predictability.run,
         "fig3": fig3_feature_importance.run,
         "roofline": roofline.run,

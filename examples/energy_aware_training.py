@@ -16,13 +16,14 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, reduced
 from repro.core import instrument
 from repro.core.governor import Governor
 from repro.core.instrument import cd_psum
 from repro.core.policies import COUNTDOWN_SLACK
+from repro.dist.compat import set_mesh, shard_map
 from repro.models.inputs import make_batch
 from repro.models.transformer import init_params, loss_fn
 from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
@@ -52,20 +53,38 @@ def main() -> None:
         params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
         return params, opt, loss
 
+    # fully-specified jit shardings: the production idiom, and required on
+    # the pinned container jax (the profile-mode io_callback token otherwise
+    # desyncs XLA's sharding-propagation parameter vector)
+    repl = NamedSharding(mesh, P())
+    dsh = NamedSharding(mesh, P("data"))
+    params = jax.device_put(params, jax.tree.map(lambda _: repl, params))
+    opt = jax.device_put(opt, jax.tree.map(lambda _: repl, opt))
     step = jax.jit(
-        jax.shard_map(
+        shard_map(
             per_device_step,
             mesh=mesh,
             in_specs=(P(), P(), P("data")),
             out_specs=(P(), P(), P()),
-            check_vma=False,
-        )
+            manual_axes={"data"},
+        ),
+        in_shardings=(
+            jax.tree.map(lambda _: repl, params),
+            jax.tree.map(lambda _: repl, opt),
+            {"tokens": dsh, "labels": dsh, "mask": dsh},
+        ),
+        out_shardings=(
+            jax.tree.map(lambda _: repl, params),
+            jax.tree.map(lambda _: repl, opt),
+            repl,
+        ),
     )
 
     print(f"data-parallel training on {n_dev} devices, COUNTDOWN Slack live:")
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for i in range(30):
             batch = make_batch(cfg, batch=8, seq_len=33, seed=i, kind="train")
+            batch = {k: jax.device_put(v, dsh) for k, v in batch.items()}
             params, opt, loss = step(params, opt, batch)
             jax.block_until_ready(loss)
             if i % 10 == 0 or i == 29:

@@ -307,7 +307,7 @@ def coverage_on_trace(trace: TraceRecord, pol: Policy, hw: HwModel = DEFAULT_HW)
     n_sites = int(trace.site.max()) + 1
     n = slack.shape[1]
     if pol.comm_mode == "pin_min":
-        return 100.0 * (slack.sum() + copy.sum() + trace.comp.sum()) / total
+        return 100.0          # min P-state everywhere, by definition
     if pol.comm_mode == "timeout":
         low_slack = np.maximum(slack - theta_eff, 0.0)
         if pol.comm_scope == "slack":

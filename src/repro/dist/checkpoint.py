@@ -1,0 +1,186 @@
+"""Atomic, optionally-async checkpointing for arbitrary pytrees.
+
+Design goals, in order:
+
+1. **Crash-atomic** — a checkpoint either exists completely or not at all.
+   Every save writes to a ``*.tmp`` file and ``os.replace``s it into place;
+   a crash mid-write leaves at most a tmp file that the next manager
+   construction sweeps away.
+2. **Skeleton-typed restore** — files store leaves positionally; the caller
+   supplies a skeleton pytree (the same structure, any leaf values) and gets
+   back leaves with the *file's* data in the *skeleton's* structure.  This
+   is what lets a mesh-epoch restart restore onto a different device layout:
+   pass per-leaf shardings and every leaf is ``device_put`` directly to its
+   new home.
+3. **Bounded retention** — ``keep`` most-recent steps survive; older files
+   are pruned after each successful save (the GC that keeps a 3-day run from
+   filling the disk).
+4. **Async option** — ``async_save=True`` snapshots the tree to host memory
+   synchronously (correctness) and does the file I/O on a single background
+   worker (training never blocks on the disk); ``wait()`` drains the queue.
+
+Leaves are stored with ``np.savez``; bfloat16 / float8 leaves (which numpy
+cannot serialize natively) are bit-cast to a same-width unsigned integer on
+write and cast back on read using a recorded dtype table.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import os
+import re
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)\.npz$")
+
+# numpy-unserializable dtypes -> (bitcast dtype, ml_dtypes name)
+_BITCAST = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8, "float8_e5m2": np.uint8}
+
+
+def _to_host(leaf) -> np.ndarray:
+    return np.asarray(jax.device_get(leaf))
+
+
+def _encode(leaf: np.ndarray) -> Tuple[np.ndarray, str]:
+    name = leaf.dtype.name
+    if name in _BITCAST:
+        return leaf.view(_BITCAST[name]), name
+    return leaf, ""
+
+
+def _decode(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if not dtype_name:
+        return arr
+    import ml_dtypes
+
+    return arr.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+
+
+class CheckpointManager:
+    """Save/restore pytrees under ``directory`` with retention pruning."""
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        # sweep tmp litter from a previous crash (atomicity guarantee #1)
+        for name in os.listdir(directory):
+            if name.endswith(".tmp"):
+                try:
+                    os.remove(os.path.join(directory, name))
+                except OSError:
+                    pass
+        self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = (
+            concurrent.futures.ThreadPoolExecutor(max_workers=1)
+            if async_save else None
+        )
+        self._futures: List[concurrent.futures.Future] = []
+
+    # -- paths -------------------------------------------------------------
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{int(step):08d}.npz")
+
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m:
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save --------------------------------------------------------------
+    def save(self, step: int, tree: Any) -> None:
+        """Checkpoint ``tree`` at ``step`` (atomic; prunes beyond ``keep``).
+
+        With ``async_save`` the device->host snapshot happens here (so the
+        caller may mutate/donate the tree immediately) and the write is
+        queued on the background worker.
+        """
+        leaves = [_to_host(x) for x in jax.tree.leaves(tree)]
+        if self._pool is not None:
+            self._futures.append(self._pool.submit(self._write, step, leaves))
+        else:
+            self._write(step, leaves)
+
+    def _write(self, step: int, leaves: List[np.ndarray]) -> None:
+        payload = {}
+        dtypes = []
+        for i, leaf in enumerate(leaves):
+            arr, dtype_name = _encode(leaf)
+            payload[f"l{i:06d}"] = arr
+            dtypes.append(dtype_name)
+        payload["dtypes"] = np.frombuffer(
+            json.dumps(dtypes).encode(), dtype=np.uint8
+        ).copy()
+        final = self._path(step)
+        tmp = final + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+        self._prune()
+
+    def _prune(self) -> None:
+        steps = self.all_steps()
+        for step in steps[: max(0, len(steps) - self.keep)]:
+            try:
+                os.remove(self._path(step))
+            except OSError:
+                pass
+
+    def wait(self) -> None:
+        """Block until all queued async saves hit the disk (re-raises errors)."""
+        for fut in self._futures:
+            fut.result()
+        self._futures.clear()
+
+    # -- restore -----------------------------------------------------------
+    def load(self, step: int, skeleton: Any, shardings: Any = None) -> Any:
+        """Restore the step's leaves into ``skeleton``'s structure.
+
+        ``shardings`` (optional) is a matching pytree of shardings; each
+        restored leaf is ``device_put`` onto its sharding — the elastic
+        restart path restores straight onto the *new* mesh.  A missing step
+        raises: silently returning the skeleton would hand callers whatever
+        placeholder values it was built from.
+        """
+        path = self._path(step)
+        if not os.path.exists(path):
+            raise FileNotFoundError(f"no checkpoint for step {step} in {self.directory}")
+        flat, treedef = jax.tree.flatten(skeleton)
+        with np.load(path) as z:
+            dtypes = json.loads(bytes(z["dtypes"]).decode())
+            loaded = [
+                _decode(z[f"l{i:06d}"], dtypes[i]) for i in range(len(dtypes))
+            ]
+        if len(loaded) != len(flat):
+            raise ValueError(
+                f"checkpoint step {step} has {len(loaded)} leaves, "
+                f"skeleton has {len(flat)}"
+            )
+        if shardings is not None:
+            sh_flat = jax.tree.leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "spec")
+            )
+            if len(sh_flat) != len(loaded):
+                raise ValueError(
+                    f"shardings tree has {len(sh_flat)} leaves, "
+                    f"checkpoint has {len(loaded)}"
+                )
+            loaded = [jax.device_put(a, s) for a, s in zip(loaded, sh_flat)]
+        return jax.tree.unflatten(treedef, loaded)
+
+    def restore_latest(self, skeleton: Any, shardings: Any = None):
+        """-> (step, tree) for the newest checkpoint on disk."""
+        step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return step, self.load(step, skeleton, shardings)

@@ -1,0 +1,54 @@
+"""Version shims over jax APIs that moved between releases.
+
+The drivers target the current jax spelling (``jax.set_mesh``,
+``jax.shard_map(..., axis_names=...)``); the pinned container ships an older
+jax where the same functionality lives under ``with mesh:`` and
+``jax.experimental.shard_map.shard_map(..., auto=...)``.  Call sites import
+from here so the rest of the codebase stays version-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable
+
+import jax
+
+# True when this jax predates the top-level ``jax.shard_map`` API.  On these
+# versions the XLA bundled with jaxlib hard-aborts (Check failed:
+# sharding.IsManualSubgroup()) when a ``lax.scan`` carries auto-sharded
+# operands inside a *partial-manual* shard_map region; callers consult this
+# flag to unroll scans in such regions (see train.loop.make_pod_train_step).
+LEGACY_PARTIAL_MANUAL = not hasattr(jax, "shard_map")
+
+
+def set_mesh(mesh) -> Any:
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    # jax 0.4.x: Mesh is itself a context manager with the same effect.
+    return mesh
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    manual_axes: Iterable[str],
+) -> Callable:
+    """``shard_map`` with ``manual_axes`` manual and every other mesh axis
+    left to the auto partitioner (the partial-manual pod-reduction pattern).
+    """
+    manual = frozenset(manual_axes)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False, axis_names=set(manual),
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset(mesh.axis_names) - manual
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False, auto=auto,
+    )

@@ -1,0 +1,72 @@
+"""int8 gradient compression for cross-pod reductions.
+
+The cross-pod (DCN) hop is the slowest wire in a multi-pod system — exactly
+where the paper finds the longest slack.  ``compressed_psum`` cuts that wire
+4x by quantizing each gradient leaf to int8 with one per-leaf fp32 scale,
+all-gathering the (int8, scale) pairs over the axis, and dequantize-summing
+locally.  The gather goes through the COUNTDOWN-instrumented
+``cd_all_gather``, so the artificial barrier + slack accounting apply to the
+compressed path too (the energy story and the bandwidth story compose).
+
+Quantization is symmetric round-to-nearest at ``scale = max|g| / 127``:
+the roundtrip error per element is at most ``scale / 2`` (1/2 LSB), which
+is enforced by a property test.  Gradient *sums* stay exact in fp32 after
+dequantization; only the per-pod representation is lossy.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.instrument import cd_all_gather
+
+AxisNames = Any
+
+
+def _quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """g -> (int8 codes, fp32 scale) with |codes * scale - g| <= scale/2."""
+    g32 = jnp.asarray(g).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(g32)) / 127.0
+    scale = jnp.maximum(scale, jnp.float32(1e-30))
+    q = jnp.clip(jnp.round(g32 / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads: Any, axis: AxisNames, mean: bool = False) -> Any:
+    """Sum (or mean) a gradient pytree over ``axis`` on an int8 wire.
+
+    Per leaf: quantize locally, all-gather codes+scales over ``axis`` (one
+    instrumented collective for the whole tree — a single barrier, like the
+    fused flat all-reduce it replaces), then dequantize and reduce in fp32.
+    Leaves come back in their original dtype.
+    """
+    flat, treedef = jax.tree.flatten(grads)
+    qs = [_quantize(g) for g in flat]
+    gathered = cd_all_gather(
+        [q for q, _ in qs] + [s for _, s in qs], axis, tiled=False
+    )
+    n_leaf = len(flat)
+    codes, scales = gathered[:n_leaf], gathered[n_leaf:]
+    out = []
+    for g, q_all, s_all in zip(flat, codes, scales):
+        n_shards = q_all.shape[0]
+        w = s_all.reshape((n_shards,) + (1,) * g.ndim)
+        total = jnp.sum(q_all.astype(jnp.float32) * w, axis=0)
+        if mean:
+            total = total / n_shards
+        out.append(total.astype(g.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def compression_ratio(grads: Any) -> float:
+    """Wire-bytes ratio of the int8 codec vs the raw dtype (for benchmarks)."""
+    flat = jax.tree.leaves(grads)
+    raw = sum(g.size * g.dtype.itemsize for g in flat)
+    comp = sum(g.size * 1 + 4 for g in flat)          # int8 codes + fp32 scale
+    return raw / max(comp, 1)

@@ -1,0 +1,94 @@
+"""Online straggler detection from barrier-arrival events.
+
+The paper's post-hoc critical-rank analysis (§5) observes that in slack-rich
+applications the *same* ranks keep arriving last — the application has a
+persistent critical path.  This module makes that analysis online: the
+governor feeds every reconstructed barrier's per-rank enter times into
+:class:`StragglerDetector`, which accumulates each rank's mean arrival
+lateness and flags ranks whose lateness is a statistical outlier across the
+fleet.  On a real cluster the flagged ranks are the ones a scheduler should
+migrate (or the only ranks that must *not* be downshifted — they carry the
+critical path, see DESIGN.md §2).
+
+Lateness is measured relative to the per-barrier mean arrival time, so the
+detector is invariant to the absolute epoch of each barrier and to drift in
+the global step rate.  The outlier test is a z-score over per-rank mean
+lateness; with one extreme laggard among ``n`` ranks the laggard's z-score
+approaches ``sqrt(n - 1)``, so the default threshold of 2.0 resolves a
+single straggler for fleets of 6+ ranks while staying quiet on balanced
+arrival noise.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+class StragglerDetector:
+    """Accumulates per-rank barrier lateness; flags statistical laggards.
+
+    Args:
+      min_samples: a rank needs at least this many observed barriers before
+        it can be flagged (guards against cold-start noise).
+      z_threshold: per-rank mean-lateness z-score above which a rank is
+        reported by :meth:`stragglers`.
+    """
+
+    def __init__(self, min_samples: int = 5, z_threshold: float = 2.0):
+        self.min_samples = min_samples
+        self.z_threshold = z_threshold
+        self._late_sum: Dict[int, float] = {}
+        self._count: Dict[int, int] = {}
+        self.n_barriers = 0
+
+    def observe_barrier(self, arrivals: Dict[int, float]) -> None:
+        """Record one barrier: ``arrivals`` maps rank -> arrival time (s).
+
+        The last arriver (largest t) is the barrier's critical rank; every
+        rank's lateness is its arrival relative to the barrier mean.
+        """
+        n = len(arrivals)
+        if n < 2:
+            return
+        mean_t = sum(arrivals.values()) / n
+        late_sum, count = self._late_sum, self._count
+        for rank, t in arrivals.items():
+            late_sum[rank] = late_sum.get(rank, 0.0) + (t - mean_t)
+            count[rank] = count.get(rank, 0) + 1
+        self.n_barriers += 1
+
+    def summary(self) -> Dict[int, float]:
+        """rank -> mean lateness (s; positive = habitually late)."""
+        return {
+            r: self._late_sum[r] / c for r, c in self._count.items() if c > 0
+        }
+
+    def stragglers(self) -> List[Tuple[int, float]]:
+        """Ranks whose mean lateness is a z-score outlier, worst first.
+
+        Returns ``[(rank, z_score), ...]`` for ranks with at least
+        ``min_samples`` observations and ``z >= z_threshold``.
+        """
+        eligible = {
+            r: s for r, s in self.summary().items()
+            if self._count[r] >= self.min_samples
+        }
+        if len(eligible) < 3:
+            return []          # z-scores are meaningless on <3 ranks
+        vals = np.asarray(list(eligible.values()), dtype=np.float64)
+        mu, sd = float(vals.mean()), float(vals.std())
+        if sd <= 0.0:
+            return []
+        out = [
+            (r, (s - mu) / sd)
+            for r, s in eligible.items()
+            if (s - mu) / sd >= self.z_threshold
+        ]
+        out.sort(key=lambda rz: -rz[1])
+        return out
+
+    def reset(self) -> None:
+        self._late_sum.clear()
+        self._count.clear()
+        self.n_barriers = 0

@@ -43,6 +43,7 @@ import numpy as np
 from repro.configs import ARCHS, SHAPES, cell_is_runnable, get_config
 from repro.core import instrument
 from repro.dist import sharding as SH
+from repro.dist.compat import set_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.models.hooks import install_constraint
 from repro.models.inputs import decode_inputs_specs, input_specs
@@ -301,7 +302,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, force=False,
         mesh, mode="zero3" if zero3 else "2d"))
     instrument.set_mode(instrument_mode)
     try:
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             # ---- phase 1: scanned module -> memory analysis (production) --
             t0 = time.time()
             fn, args_s, in_sh, out_sh, donate = build_cell(

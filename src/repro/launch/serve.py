@@ -16,6 +16,7 @@ import jax
 
 from repro.configs import get_config, reduced
 from repro.dist import sharding as SH
+from repro.dist.compat import set_mesh
 from repro.models import init_params
 from repro.models.hooks import install_constraint
 from repro.models.inputs import make_batch
@@ -50,7 +51,7 @@ def main() -> None:
         psh = SH.serve_param_shardings(mesh, params)
         params = jax.tree.map(lambda a, s: jax.device_put(a, s), params, psh)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         eng = ServeEngine(cfg, params, max_len=args.prompt_len + args.steps + 8,
                           temperature=args.temperature)
         batch = make_batch(cfg, batch=args.batch, seq_len=args.prompt_len,

@@ -24,6 +24,7 @@ from repro.core import instrument
 from repro.core.governor import Governor
 from repro.dist import sharding as SH
 from repro.dist.checkpoint import CheckpointManager
+from repro.dist.compat import set_mesh
 from repro.dist.elastic import ElasticMesh, FailureInjector
 from repro.models.hooks import install_constraint
 from repro.train.data import DataLoader
@@ -99,7 +100,7 @@ def main() -> None:
     # checkpoint (the 1000-node recovery path, scaled down)
     while step < args.steps:
         failed_device = None
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             while step < args.steps:
                 failed_device = injector.check(step)
                 if failed_device is not None:
@@ -123,13 +124,19 @@ def main() -> None:
             em.fail(failed_device)
             if mgr is None:
                 raise RuntimeError("node failure without checkpointing enabled")
-            latest = mgr.latest_step() or 0
-            skel = jax.tree.map(
-                lambda a: np.zeros(a.shape, a.dtype), jax.device_get(state)
-            )
+            latest = mgr.latest_step()
+            host_state = jax.device_get(state)
             del state
             jax.clear_caches()                      # old-mesh executables out
-            state_host = mgr.load(latest, skel)
+            if latest is None:
+                # failed before the first checkpoint: cold restart from init
+                latest = 0
+                state_host = init_state(cfg, opt_cfg, jax.random.PRNGKey(args.seed))
+            else:
+                skel = jax.tree.map(
+                    lambda a: np.zeros(a.shape, a.dtype), host_state
+                )
+                state_host = mgr.load(latest, skel)
             mesh = em.build(model_parallel=args.model_parallel)
             state, step_fn = build(mesh, cfg, opt_cfg, state_host)
             step = latest

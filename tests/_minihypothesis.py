@@ -1,0 +1,142 @@
+"""A tiny, dependency-free stand-in for the `hypothesis` API surface that
+tests/test_properties.py uses.
+
+The container this repo is developed in does not ship `hypothesis`, and the
+environment is pip-frozen.  Rather than skip the property suite, this module
+implements the consumed subset — ``given``, ``settings`` and the
+``integers/floats/lists/tuples/just`` strategies with ``map``/``flatmap`` —
+as deterministic random sampling (seeded per test name).  It is registered
+in ``conftest.py`` **only when the real hypothesis is absent**; CI installs
+the real library and never sees this file.
+
+Differences from real hypothesis (acceptable for a fallback):
+  * sampling is uniform random, with no shrinking and no adversarial corpus;
+  * ``deadline`` and other settings besides ``max_examples`` are ignored.
+"""
+from __future__ import annotations
+
+import types
+import zlib
+from typing import Any, Callable
+
+import numpy as np
+
+__version__ = "0.0-mini"
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+    def map(self, f: Callable[[Any], Any]) -> "_Strategy":
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+    def flatmap(self, f: Callable[[Any], "_Strategy"]) -> "_Strategy":
+        return _Strategy(lambda rng: f(self._draw(rng)).example(rng))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "_Strategy":
+        def draw(rng):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too restrictive")
+
+        return _Strategy(draw)
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 30) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(
+    min_value: float = 0.0,
+    max_value: float = 1.0,
+    allow_nan: bool = True,
+    allow_infinity: bool = True,
+    width: int = 64,
+) -> _Strategy:
+    def draw(rng):
+        v = float(rng.uniform(min_value, max_value))
+        # include the exact endpoints occasionally (cheap edge coverage)
+        r = rng.random()
+        if r < 0.05:
+            v = min_value
+        elif r < 0.10:
+            v = max_value
+        if width == 32:
+            v = float(np.float32(v))
+        return v
+
+    return _Strategy(draw)
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def tuples(*strats: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+
+def just(value: Any) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def settings(max_examples: int = 100, deadline: Any = None, **_ignored):
+    def decorate(fn):
+        fn._mini_hypothesis_settings = {"max_examples": max_examples}
+        return fn
+
+    return decorate
+
+
+def given(*strats: _Strategy):
+    def decorate(fn):
+        conf = getattr(fn, "_mini_hypothesis_settings", {"max_examples": 25})
+        seed = zlib.crc32(fn.__name__.encode())
+
+        # zero-arg wrapper on purpose: pytest must not mistake the wrapped
+        # function's parameters for fixtures
+        def wrapper():
+            rng = np.random.default_rng(seed)
+            for _ in range(conf["max_examples"]):
+                args = tuple(s.example(rng) for s in strats)
+                try:
+                    fn(*args)
+                except Exception as e:  # noqa: BLE001 — attach the example
+                    raise AssertionError(
+                        f"falsifying example (minihypothesis): {fn.__name__}{args!r}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return decorate
+
+
+# expose a module-like `strategies` so `from hypothesis import strategies as st`
+# and `import hypothesis.strategies` both work
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in (
+    "integers", "floats", "lists", "tuples", "just", "booleans", "sampled_from",
+):
+    setattr(strategies, _name, globals()[_name])

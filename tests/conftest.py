@@ -6,6 +6,21 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:
+    import hypothesis  # noqa: F401 — the real library, when installed
+except ImportError:
+    # pip-frozen container: register the bundled mini-implementation so the
+    # property suite still runs (see tests/_minihypothesis.py)
+    import importlib.util
+
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", os.path.join(os.path.dirname(__file__), "_minihypothesis.py")
+    )
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
+
 import jax
 import pytest
 

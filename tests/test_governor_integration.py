@@ -1,0 +1,90 @@
+"""Governor <-> StragglerDetector integration: a synthetic event stream with
+one deliberate laggard rank must surface in ``GovernorReport.stragglers``,
+and the detector's view must stay consistent with the governor's slack
+accounting (the laggard waits least, everyone else waits for it)."""
+import numpy as np
+import pytest
+
+from repro.core.governor import Governor
+from repro.core.policies import COUNTDOWN, COUNTDOWN_SLACK
+from repro.dist.straggler import StragglerDetector
+
+
+def _stream(gov, n_ranks=8, n_calls=40, laggard=5, lag=0.003, jitter=1e-4, seed=0):
+    """Emit barrier_enter/exit + copy_exit events for ``n_calls`` barriers.
+
+    Every rank arrives with small gaussian jitter; ``laggard`` always
+    arrives ``lag`` seconds after the pack.  Exit = the last arrival (the
+    barrier semantics), copy takes 0.5 ms at full speed.
+    """
+    rng = np.random.default_rng(seed)
+    t = 10.0
+    for call in range(n_calls):
+        arrivals = {r: t + rng.normal(0.0, jitter) for r in range(n_ranks)}
+        arrivals[laggard] = t + lag
+        release = max(arrivals.values())
+        for r, tr in arrivals.items():
+            gov.sink(r, "barrier_enter", call, tr)
+        for r in range(n_ranks):
+            gov.sink(r, "barrier_exit", call, release)
+            gov.sink(r, "copy_exit", call, release + 0.5e-3)
+        t = release + 0.01
+
+
+def test_laggard_rank_surfaces_in_report():
+    gov = Governor(policy=COUNTDOWN_SLACK)
+    _stream(gov, laggard=5)
+    rep = gov.finalize()
+    assert rep.n_calls == 40
+    flagged = [r for r, z in rep.stragglers]
+    assert flagged == [5]
+    # the laggard's z-score for one outlier in 8 ranks approaches sqrt(7)
+    z = dict(rep.stragglers)[5]
+    assert 2.0 <= z <= np.sqrt(7) + 1e-6
+
+
+def test_straggler_summary_orders_ranks_by_lateness():
+    gov = Governor()
+    _stream(gov, laggard=2, lag=0.004)
+    rep = gov.finalize()
+    # summary: laggard has the largest (positive) mean lateness; the others
+    # sit slightly early (negative), since lateness is mean-relative
+    worst = max(rep.straggler_summary, key=rep.straggler_summary.get)
+    assert worst == 2
+    assert rep.straggler_summary[2] > 0
+    others = [v for r, v in rep.straggler_summary.items() if r != 2]
+    assert all(v < 0 for v in others)
+
+
+def test_laggard_slack_is_on_everyone_else():
+    """The paper's critical-rank structure: the rank that arrives last is
+    the one with (near) zero slack; the waiting is booked to the others."""
+    det = StragglerDetector()
+    gov = Governor(policy=COUNTDOWN, detector=det)
+    n_ranks, n_calls, lag = 8, 30, 0.005
+    _stream(gov, n_ranks=n_ranks, n_calls=n_calls, laggard=0, lag=lag, jitter=0.0)
+    rep = gov.finalize()
+    # each of the 7 non-critical ranks waits ~lag per call
+    expected = n_calls * (n_ranks - 1) * lag
+    assert rep.total_slack == pytest.approx(expected, rel=1e-3)
+    # 5 ms slack >> 500 us theta: every non-critical wait is exploitable
+    assert rep.n_downshifts == n_calls * (n_ranks - 1)
+    assert rep.energy_saving_pct > 0
+    assert [r for r, _ in rep.stragglers] == [0]
+    # governor shares its detector with the caller
+    assert det.n_barriers == n_calls
+
+
+def test_balanced_ranks_flag_nothing():
+    gov = Governor()
+    rng = np.random.default_rng(1)
+    for call in range(30):
+        base = 5.0 + call * 0.01
+        arrivals = {r: base + rng.normal(0.0, 1e-4) for r in range(8)}
+        for r, tr in arrivals.items():
+            gov.sink(r, "barrier_enter", call, tr)
+        release = max(arrivals.values())
+        for r in range(8):
+            gov.sink(r, "barrier_exit", call, release)
+    rep = gov.finalize()
+    assert rep.stragglers == []

@@ -93,6 +93,7 @@ def test_multidevice_fsdp_and_instrumented_pod_step():
         from repro.train.optimizer import OptConfig
         from repro.models.inputs import make_batch
         from repro.core import instrument
+        from repro.dist.compat import set_mesh
 
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = reduced(get_config("llama3.2-1b"))
@@ -106,7 +107,7 @@ def test_multidevice_fsdp_and_instrumented_pod_step():
                  "opt": jax.device_put(state["opt"], os_)}
         batch = jax.device_put(batch, bs)
         install_constraint(SH.activation_constraint_fn(mesh))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             auto = jax.jit(make_train_step(cfg, opt_cfg))
             s1, m1 = auto(state, batch)
             assert jnp.isfinite(m1["loss"])
@@ -147,6 +148,7 @@ def test_elastic_restart_on_smaller_mesh():
         from repro.configs import get_config, reduced
         from repro.dist import sharding as SH
         from repro.dist.checkpoint import CheckpointManager
+        from repro.dist.compat import set_mesh
         from repro.dist.elastic import ElasticMesh
         from repro.models.hooks import install_constraint
         from repro.train.loop import make_train_step, init_state
@@ -162,7 +164,7 @@ def test_elastic_restart_on_smaller_mesh():
         batch = make_batch(cfg, batch=8, seq_len=32, kind="train")
         with tempfile.TemporaryDirectory() as d:
             mgr = CheckpointManager(d)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 step = jax.jit(make_train_step(cfg, opt_cfg))
                 state, m_before = step(state, batch)
                 mgr.save(1, state)
@@ -175,7 +177,7 @@ def test_elastic_restart_on_smaller_mesh():
             ps = SH.param_shardings(mesh2, state["params"])
             os_ = SH.opt_state_shardings(mesh2, ps, state["opt"])
             _, restored = mgr.restore_latest(skel, {"params": ps, "opt": os_})
-            with jax.set_mesh(mesh2):
+            with set_mesh(mesh2):
                 step2 = jax.jit(make_train_step(cfg, opt_cfg))
                 restored, m_after = step2(restored, batch)
                 assert jnp.isfinite(m_after["loss"])
