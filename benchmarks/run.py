@@ -10,6 +10,7 @@ full JSON artifacts under artifacts/.
   roofline— 3-term roofline per (arch x shape x mesh) from dry-run artifacts
   runtime — framework micro-benchmarks (simulator/governor/barrier cost)
   dist    — distribution substrate (int8 compressed_psum, straggler detector)
+  serve   — static vs continuous batching tok/s + priced decode slack
 
 ``python -m benchmarks.run [--only table3,roofline] [--full]``
 """
@@ -29,6 +30,7 @@ def main() -> None:
     from benchmarks import (
         bench_dist,
         bench_runtime,
+        bench_serve,
         fig3_feature_importance,
         roofline,
         table1_predictability,
@@ -41,6 +43,7 @@ def main() -> None:
         "table3": table3_runtime_comparison.run,
         "runtime": bench_runtime.run,
         "dist": bench_dist.run,
+        "serve": bench_serve.run,
         "table1": table1_predictability.run,
         "fig3": fig3_feature_importance.run,
         "roofline": roofline.run,

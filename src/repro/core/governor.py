@@ -86,6 +86,35 @@ class Governor:
             elif phase == "copy_exit":
                 rec.copy_end[rank] = t
 
+    # non-collective event sources ---------------------------------------------
+    def ingest_phase(
+        self,
+        rank: int,
+        call_id: int,
+        t_enter: float,
+        t_slack_end: float,
+        t_copy_end: Optional[float] = None,
+    ) -> None:
+        """Book one fully-formed phase from a non-collective source.
+
+        Serving-side producers (decode underfill, inter-arrival idle gaps —
+        see :mod:`repro.serve.slack`) know the whole phase at once instead of
+        streaming enter/exit events; this books the same CallRecord and the
+        same timeout-policy actuation the event-sink path would.
+        """
+        rec = CallRecord(call_id)
+        rec.enter[rank] = t_enter
+        rec.slack_end[rank] = t_slack_end
+        rec.copy_end[rank] = t_copy_end if t_copy_end is not None else t_slack_end
+        with self._lock:
+            self._done.append(rec)
+            slack = t_slack_end - t_enter
+            if slack >= self.policy.theta and self.policy.comm_mode in (
+                "timeout", "predict_timeout",
+            ):
+                self.actuation_log.append((t_slack_end, rank, "set_pstate_min"))
+                self.actuation_log.append((t_slack_end, rank, "restore_pstate_max"))
+
     def finalize(self) -> GovernorReport:
         hw, pol = self.hw, self.policy
         theta_eff = pol.theta + 0.5 * hw.switch_latency

@@ -226,6 +226,49 @@ def cache_shardings(mesh, cache: Any, *, serve_tp: bool = False) -> Any:
     return jax.tree_util.tree_map_with_path(leaf, cache)
 
 
+# page-pool leaf rules: name -> KV-head dim index with the leading scan-stack
+# axis (if any) stripped.  Page arrays are (n_pages, page, Hkv, D) / scale
+# pages (n_pages, page, Hkv); recurrent-state leaves fall through to
+# _CACHE_RULES (per-slot batch dim over the data axes).
+_PAGE_RULES = {
+    "k_pages": 2,
+    "v_pages": 2,
+    "k_scale_pages": 2,
+    "v_scale_pages": 2,
+}
+
+
+def page_pool_shardings(mesh, blocks: Any, *, serve_tp: bool = True) -> Any:
+    """Paged serving-pool layout (see ``repro.serve.kvcache``).
+
+    Page arrays replicate over the data axes — any decode slot must reach
+    any physical page, so the pool cannot shard over requests — and with
+    ``serve_tp`` split the KV-head dim over ``'model'``, matching the
+    tensor-parallel head split of ``serve_param_shardings``.  Recurrent
+    per-slot state shards its slot (batch) dim over the data axes like the
+    dense cache.
+    """
+    data = _data_axes(mesh)
+
+    def leaf(path, x):
+        name = _leaf_name(path)
+        stacked = bool(path) and getattr(path[0], "key", None) == "stack"
+        offset = 1 if stacked else 0
+        entries: list = [None] * x.ndim
+        if name in _PAGE_RULES:
+            if serve_tp:
+                entries[_PAGE_RULES[name] + offset] = "model"
+        else:
+            b_dim, tp_dim = _CACHE_RULES.get(name, (0, None))
+            if b_dim is not None and b_dim + offset < x.ndim:
+                entries[b_dim + offset] = data
+            if serve_tp and tp_dim is not None and tp_dim + offset < x.ndim:
+                entries[tp_dim + offset] = "model"
+        return NamedSharding(mesh, sanitize_spec(mesh, P(*entries), x.shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, blocks)
+
+
 def serve_param_shardings(mesh, params: Any) -> Any:
     """Pure tensor-parallel serving rules: weights replicated over 'data'
     (throughput replicas), matrices Megatron-split over 'model' only."""

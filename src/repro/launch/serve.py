@@ -1,10 +1,18 @@
-"""Serving driver: batched generation with the serving partition rules.
+"""Serving driver: static batch or continuous batching with priced slack.
 
+  # legacy static batch (TP partition rules on a multi-chip host)
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
       --batch 4 --prompt-len 32 --steps 16 [--kv-int8]
 
-On a multi-chip host this applies ``serve_param_shardings`` (TP weights,
-flash-decoding cache layout); on this container it runs single-device.
+  # continuous batching: paged KV pool, Poisson arrivals, governor report
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
+      --continuous --n-requests 8 --arrival-rate 40 --slots 4 --page-size 8
+
+Timing excludes compilation: one warmup generate runs before the clock
+starts and the compile time is printed separately.  On a multi-chip host
+this applies ``serve_param_shardings`` (TP weights) and, in continuous
+mode, ``page_pool_shardings`` for the paged KV pool; on this container it
+runs single-device.
 """
 from __future__ import annotations
 
@@ -13,14 +21,97 @@ import dataclasses
 import time
 
 import jax
+import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.core.governor import Governor
 from repro.dist import sharding as SH
 from repro.dist.compat import set_mesh
 from repro.models import init_params
 from repro.models.hooks import install_constraint
 from repro.models.inputs import make_batch
-from repro.serve.engine import ServeEngine
+from repro.serve import (
+    ContinuousEngine,
+    Request,
+    ServeEngine,
+    SLOTracker,
+    poisson_arrivals,
+)
+
+
+def _run_static(args, cfg, params) -> None:
+    eng = ServeEngine(cfg, params, max_len=args.prompt_len + args.steps + 8,
+                      temperature=args.temperature)
+    batch = make_batch(cfg, batch=args.batch, seq_len=args.prompt_len,
+                       kind="prefill")
+    t0 = time.time()
+    jax.block_until_ready(eng.generate(batch, n_steps=args.steps,
+                                       key=jax.random.PRNGKey(1)))
+    t_compile = time.time() - t0
+    t0 = time.time()
+    out = jax.block_until_ready(eng.generate(batch, n_steps=args.steps,
+                                             key=jax.random.PRNGKey(1)))
+    dt = time.time() - t0
+    print(f"[serve] {args.arch}: {out.shape} tokens in {dt:.2f}s "
+          f"({args.batch * args.steps / dt:.1f} tok/s, compile {t_compile:.2f}s, "
+          f"kv_int8={args.kv_int8})")
+    print(f"[serve] sample: {out[0].tolist()}")
+
+
+def _make_requests(args, cfg) -> list:
+    rng = np.random.default_rng(args.seed)
+    arrivals = poisson_arrivals(args.n_requests, args.arrival_rate, seed=args.seed,
+                                burst_every=max(args.slots, 2), burst_gap=0.05)
+    base_key = jax.random.PRNGKey(args.seed) if args.temperature > 0 else None
+    reqs = []
+    for i in range(args.n_requests):
+        prompt = rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32)
+        max_new = int(rng.integers(max(2, args.steps // 2), args.steps + 1))
+        req = Request(prompt=prompt, max_new=max_new, arrival=float(arrivals[i]),
+                      key=None if base_key is None else jax.random.fold_in(base_key, i))
+        if cfg.n_prefix:
+            req.prefix_embeds = rng.normal(
+                0, 0.02, size=(cfg.n_prefix, cfg.d_model)
+            ).astype(np.float32)
+        reqs.append(req)
+    return reqs
+
+
+def _run_continuous(args, cfg, params, mesh, n_dev: int, mp: int) -> None:
+    max_len = args.prompt_len + args.steps + args.page_size
+    max_len += (-max_len) % args.page_size
+    eng = ContinuousEngine(cfg, params, n_slots=args.slots, max_len=max_len,
+                           page=args.page_size, temperature=args.temperature)
+    if mp > 1 or n_dev > 1:
+        eng.pool.blocks = jax.device_put(
+            eng.pool.blocks, SH.page_pool_shardings(mesh, eng.pool.blocks)
+        )
+    # warmup: compile prefill bucket + join + decode before the clock starts
+    warm = make_batch(cfg, batch=1, seq_len=args.prompt_len, kind="prefill")
+    t0 = time.time()
+    eng.generate(warm, n_steps=2)
+    t_compile = time.time() - t0
+
+    gov = Governor()
+    slo = SLOTracker(tpot_target=args.tpot_target or None)
+    reqs = _make_requests(args, cfg)
+    t0 = time.time()
+    done = eng.serve(reqs, governor=gov, slo=slo)
+    dt = time.time() - t0
+    n_tok = sum(len(r.out) for r in done)
+    rep = gov.finalize()
+    meter = eng._last_meter
+    print(f"[serve] {args.arch} continuous: {len(done)} requests, {n_tok} tokens "
+          f"in {dt:.2f}s ({n_tok / dt:.1f} tok/s, compile {t_compile:.2f}s, "
+          f"fill {meter.fill_fraction:.2f}, kv_int8={args.kv_int8})")
+    print(f"[serve] slack: {rep.total_slack * 1e3:.1f} ms priced over "
+          f"{rep.n_calls} phases, {rep.n_downshifts} downshifts, "
+          f"{len(gov.actuation_log)} actuations, "
+          f"energy saving {rep.energy_saving_pct:.1f}%")
+    s = slo.summary()
+    print(f"[serve] SLO: TTFT p95 {s['ttft']['p95'] * 1e3:.1f} ms, "
+          f"TPOT p95 {s['tpot']['p95'] * 1e3:.1f} ms over "
+          f"{s['completed']} completed")
 
 
 def main() -> None:
@@ -33,6 +124,16 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--kv-int8", action="store_true")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over the paged KV pool")
+    ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--arrival-rate", type=float, default=40.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--tpot-target", type=float, default=0.0,
+                    help="TPOT SLO target (s); 0 disables throttling")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -52,17 +153,10 @@ def main() -> None:
         params = jax.tree.map(lambda a, s: jax.device_put(a, s), params, psh)
 
     with set_mesh(mesh):
-        eng = ServeEngine(cfg, params, max_len=args.prompt_len + args.steps + 8,
-                          temperature=args.temperature)
-        batch = make_batch(cfg, batch=args.batch, seq_len=args.prompt_len,
-                           kind="prefill")
-        t0 = time.time()
-        out = eng.generate(batch, n_steps=args.steps, key=jax.random.PRNGKey(1))
-        dt = time.time() - t0
-    print(f"[serve] {args.arch}: {out.shape} tokens in {dt:.2f}s "
-          f"({args.batch * args.steps / dt:.1f} tok/s incl. compile, "
-          f"kv_int8={args.kv_int8})")
-    print(f"[serve] sample: {out[0].tolist()}")
+        if args.continuous:
+            _run_continuous(args, cfg, params, mesh, n, mp)
+        else:
+            _run_static(args, cfg, params)
 
 
 if __name__ == "__main__":

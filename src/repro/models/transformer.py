@@ -270,10 +270,16 @@ def _block_prefill(cfg, kind, p, x, positions, bc):
     return x, bc
 
 
-def _block_decode(cfg, kind, p, x, pos, bc):
+def _block_decode(cfg, kind, p, x, pos, bc, attn_fn=None):
+    """One block's single-token step.  ``attn_fn(p_attn, h, bc) -> (y, bc)``
+    overrides the dense-cache attention (the paged serving engine passes a
+    page-table closure); everything else is shared."""
     if kind == "attn":
         h = L.apply_norm(cfg, p["ln1"], x)
-        y, bc = L.attention_decode(cfg, p["attn"], h, pos, bc)
+        if attn_fn is None:
+            y, bc = L.attention_decode(cfg, p["attn"], h, pos, bc)
+        else:
+            y, bc = attn_fn(p["attn"], h, bc)
         x = x + y
         h = L.apply_norm(cfg, p["ln2"], x)
         if cfg.is_moe:
@@ -340,8 +346,13 @@ def prefill(cfg, params, batch, cache) -> Tuple[jnp.ndarray, Params]:
     return logits, new_cache
 
 
-def decode_step(cfg, params, token, pos, cache) -> Tuple[jnp.ndarray, Params]:
-    """One decode step.  token: (B,) int32; pos: scalar int32 position."""
+def decode_step(cfg, params, token, pos, cache, *, attn_fn=None) -> Tuple[jnp.ndarray, Params]:
+    """One decode step.  token: (B,) int32; pos: scalar int32 position
+    (or (B,) per-request positions when ``attn_fn`` handles them).
+
+    ``cache`` may be the dense per-slot cache from :func:`init_cache`, or
+    any tree with the same stack/rem block structure whose attention
+    entries are consumed by ``attn_fn`` (see ``repro.serve.engine``)."""
     dtype = L.dtype_of(cfg.compute_dtype)
     x = jnp.take(params["embed"], token[:, None], axis=0).astype(dtype)
     x = x * math.sqrt(cfg.d_model)
@@ -349,7 +360,9 @@ def decode_step(cfg, params, token, pos, cache) -> Tuple[jnp.ndarray, Params]:
     def decode_period(x, pp, pc):
         new_pc = {}
         for j, kind in enumerate(cfg.pattern):
-            x, new_pc[str(j)] = _block_decode(cfg, kind, pp[str(j)], x, pos, pc[str(j)])
+            x, new_pc[str(j)] = _block_decode(
+                cfg, kind, pp[str(j)], x, pos, pc[str(j)], attn_fn
+            )
         return x, new_pc
 
     if cfg.scan_layers:
@@ -374,7 +387,7 @@ def decode_step(cfg, params, token, pos, cache) -> Tuple[jnp.ndarray, Params]:
         new_cache["rem"] = {}
         for j, kind in enumerate(rem_kinds):
             x, bc = _block_decode(
-                cfg, kind, params["rem"][str(j)], x, pos, cache["rem"][str(j)]
+                cfg, kind, params["rem"][str(j)], x, pos, cache["rem"][str(j)], attn_fn
             )
             new_cache["rem"][str(j)] = bc
     x = L.apply_norm(cfg, params["final_norm"], x)

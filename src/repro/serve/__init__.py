@@ -1,0 +1,37 @@
+"""``repro.serve`` — the continuous-batching serving subsystem.
+
+The serving-side analogue of the paper's slack mechanism: decode-slot
+underfill and inter-arrival idle gaps are isolated, measured, and priced
+in joules by the same governor that prices MPI slack.
+
+``kvcache``    block-paged KV pool: free-list allocation with admission
+               reservations, per-request page tables, scratch page for
+               idle slots, int8 pages via the ``kv_quant`` path, and the
+               paged single-token decode attention.
+``scheduler``  continuous batching: arrival queue, page-bounded
+               admission, join-on-prefill / evict-on-EOS slot lifecycle,
+               synthetic Poisson arrival traces.
+``slack``      the governor bridge: per-step filled-vs-capacity and idle
+               gaps become ``Governor.ingest_phase`` events.
+``slo``        per-request TTFT/TPOT percentile tracking feeding the
+               scheduler's concurrency cap.
+``engine``     :class:`ContinuousEngine` (paged, continuous) and the
+               legacy static-batch :class:`ServeEngine` wrapper.
+"""
+from repro.serve.engine import ContinuousEngine, ServeEngine, make_serve_steps  # noqa: F401
+from repro.serve.kvcache import PagedKVPool  # noqa: F401
+from repro.serve.scheduler import Request, Scheduler, poisson_arrivals  # noqa: F401
+from repro.serve.slack import DecodeSlackMeter  # noqa: F401
+from repro.serve.slo import SLOTracker  # noqa: F401
+
+__all__ = [
+    "ContinuousEngine",
+    "DecodeSlackMeter",
+    "PagedKVPool",
+    "Request",
+    "Scheduler",
+    "ServeEngine",
+    "SLOTracker",
+    "make_serve_steps",
+    "poisson_arrivals",
+]

@@ -1,22 +1,48 @@
-"""Batched serving engine: prefill/decode step builders + a simple scheduler.
+"""Serving engines: continuous batching over the paged KV pool + legacy API.
 
-``make_serve_steps`` produces the jit-able ``prefill_step`` and
-``decode_step`` the dry-run lowers for the ``prefill_*`` / ``decode_*`` /
-``long_*`` shape cells.  ``ServeEngine`` drives real batched generation on
-this container (greedy or temperature sampling) for the examples/tests.
+``ContinuousEngine`` is the subsystem's production path: a fixed-width
+decode batch of ``n_slots`` whose slots are continuously refilled —
+arrived requests **join on prefill** (prefill runs through the stock
+``transformer.prefill`` and is scattered into pool pages), finished
+requests **evict on EOS** freeing their slot and pages in the same step.
+Each decode step runs one jitted paged step for all slots (idle slots
+write into the scratch page), and reports filled-vs-capacity plus
+inter-arrival idle gaps to the governor through
+:class:`~repro.serve.slack.DecodeSlackMeter`, so serving underfill is
+priced in joules exactly like MPI slack.
+
+``ServeEngine`` is the original static-batch engine, kept as a thin
+compatibility wrapper: one prefill, a fixed batch, ``n_steps`` decode
+steps for everyone.  ``ContinuousEngine.generate`` reproduces its
+output token-for-token for greedy decoding (tier-1 asserted).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.transformer import decode_step as _decode
-from repro.models.transformer import init_cache, prefill as _prefill
+from repro.models.transformer import init_cache, stack_layout
+from repro.models.transformer import prefill as _prefill
+from repro.serve.kvcache import (
+    SCRATCH_PAGE,
+    PagedKVPool,
+    paged_attention_decode,
+    scatter_prefill_attn,
+)
+from repro.serve.scheduler import Request, Scheduler
+from repro.serve.slack import DecodeSlackMeter
 
+
+# --------------------------------------------------------------------------
+# legacy static-batch engine (compatibility wrapper)
+# --------------------------------------------------------------------------
 
 def make_serve_steps(cfg) -> Tuple[Callable, Callable]:
     """Returns (prefill_step(params, batch, cache), decode_step(params, token, pos, cache))."""
@@ -69,3 +95,271 @@ class ServeEngine:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         sub = jax.random.fold_in(key, i)
         return jax.random.categorical(sub, logits / self.temperature).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# paged step builders
+# --------------------------------------------------------------------------
+
+def make_paged_decode_step(cfg) -> Callable:
+    """decode(params, token (B,), pos (B,), table (B,M), blocks) -> (logits, blocks).
+
+    Reuses the stock ``transformer.decode_step`` walker (scan/rem stack,
+    MoE dropless decode, SSM/RG-LRU state) and swaps only the attention:
+    a closure over the page table routes it through the paged pool.
+    """
+
+    def step(params, token, pos, table, blocks):
+        def paged_attn(p_attn, h, bc):
+            return paged_attention_decode(cfg, p_attn, h, pos, table, bc)
+
+        return _decode(cfg, params, token, pos, blocks, attn_fn=paged_attn)
+
+    return step
+
+
+def make_join_step(cfg) -> Callable:
+    """join(blocks, prefill_cache, page_ids (n_used,), slot) -> blocks.
+
+    Scatters a batch-1 prefill cache into the pool: attention K/V into the
+    slot's freshly allocated pages, recurrent state into the slot's row.
+    """
+
+    def join(blocks, cache, page_ids, slot):
+        new_stack = {}
+        for j, kind in enumerate(cfg.pattern):
+            pb, cb = blocks["stack"][str(j)], cache["stack"][str(j)]
+            if kind == "attn":
+                new_stack[str(j)] = scatter_prefill_attn(pb, cb, page_ids, stacked=True)
+            else:
+                new_stack[str(j)] = jax.tree.map(
+                    lambda big, small: big.at[:, slot].set(small[:, 0]), pb, cb
+                )
+        new_blocks = {"stack": new_stack}
+        _, rem_kinds = stack_layout(cfg)
+        if rem_kinds:
+            new_blocks["rem"] = {}
+            for j, kind in enumerate(rem_kinds):
+                pb, cb = blocks["rem"][str(j)], cache["rem"][str(j)]
+                if kind == "attn":
+                    new_blocks["rem"][str(j)] = scatter_prefill_attn(
+                        pb, cb, page_ids, stacked=False
+                    )
+                else:
+                    new_blocks["rem"][str(j)] = jax.tree.map(
+                        lambda big, small: big.at[slot].set(small[0]), pb, cb
+                    )
+        return new_blocks
+
+    return join
+
+
+# --------------------------------------------------------------------------
+# continuous-batching engine
+# --------------------------------------------------------------------------
+
+@dataclass
+class ContinuousEngine:
+    """Continuous batching over a paged KV pool with governor-priced slack.
+
+    ``n_slots`` is the decode batch width, ``max_len`` the per-request
+    position budget (multiple of ``page``), ``num_pages`` optionally
+    shrinks the pool below full occupancy to exercise admission control.
+    For windowed archs prompts must fit inside the window (the pool
+    stores positions linearly and masks by window at read).
+    """
+
+    cfg: Any
+    params: Any
+    n_slots: int = 4
+    max_len: int = 128
+    page: int = 16
+    num_pages: Optional[int] = None
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        self.pool = PagedKVPool(
+            self.cfg, self.n_slots, self.max_len, self.page, self.num_pages
+        )
+        self._prefill = jax.jit(partial(_prefill, self.cfg))
+        self._decode = jax.jit(make_paged_decode_step(self.cfg))
+        self._join = jax.jit(make_join_step(self.cfg))
+        m = self.pool.max_pages_per_req
+        self._table = np.full((self.n_slots, m), SCRATCH_PAGE, np.int32)
+        self._lengths = np.zeros((self.n_slots,), np.int32)
+        self._tokens = np.zeros((self.n_slots,), np.int32)
+
+    # ---- request lifecycle ----------------------------------------------
+    def _join_request(self, req: Request) -> None:
+        cfg = self.cfg
+        prompt = np.asarray(req.prompt, np.int32)
+        total = len(prompt) + cfg.n_prefix
+        n_used = self.pool.pages_needed(total)
+        lpad = n_used * self.pool.page
+        if cfg.attention in ("swa", "local") and cfg.window and lpad > cfg.window:
+            raise ValueError(
+                f"paged serving stores positions linearly: prompt pages {lpad} "
+                f"must fit the attention window {cfg.window}"
+            )
+        batch: Dict[str, Any] = {"tokens": jnp.asarray(prompt[None])}
+        if req.prefix_embeds is not None:
+            batch["prefix_embeds"] = jnp.asarray(np.asarray(req.prefix_embeds)[None])
+        cache = init_cache(cfg, 1, lpad)
+        logits, cache = self._prefill(self.params, batch, cache)
+        req.pages = self.pool.alloc(req.rid, n_used)
+        slot = req.slot
+        self._table[slot] = SCRATCH_PAGE
+        self._table[slot, :n_used] = req.pages
+        self.pool.blocks = self._join(
+            self.pool.blocks, cache, jnp.asarray(req.pages, jnp.int32), jnp.int32(slot)
+        )
+        tok = int(self._select_one(logits[0], req))
+        req.out.append(tok)
+        self._lengths[slot] = total
+        self._tokens[slot] = tok
+
+    def _select_one(self, logits, req: Request) -> int:
+        if self.temperature <= 0.0 or req.key is None:
+            return int(jnp.argmax(logits))
+        sub = jax.random.fold_in(req.key, req.n_generated)
+        return int(jax.random.categorical(sub, logits / self.temperature))
+
+    def _grow_pages(self, req: Request) -> None:
+        pos = int(self._lengths[req.slot])
+        while pos // self.pool.page >= len(req.pages):
+            (pid,) = self.pool.alloc(req.rid, 1)
+            self._table[req.slot, len(req.pages)] = pid
+            req.pages.append(pid)
+
+    def _retire(self, req: Request, sched: Scheduler, slo, now: float) -> None:
+        if slo is not None:
+            slo.on_finish(req, now)
+        else:
+            req.t_done = now
+        self._table[req.slot] = SCRATCH_PAGE
+        self._tokens[req.slot] = 0
+        self._lengths[req.slot] = 0
+        sched.release(req)
+
+    # ---- driving loop ----------------------------------------------------
+    def serve(
+        self,
+        requests: List[Request],
+        governor=None,
+        slo=None,
+        max_steps: int = 100_000,
+    ) -> List[Request]:
+        """Run all requests to completion; returns them with outputs filled.
+
+        Arrival offsets are honored against a wall clock started at call
+        time; idle waits and per-step underfill are reported to
+        ``governor`` (a :class:`repro.core.governor.Governor`) when given.
+        """
+        sched = Scheduler(self.pool, self.n_slots, n_prefix=self.cfg.n_prefix, slo=slo)
+        for r in requests:
+            if self.cfg.n_prefix and r.prefix_embeds is None:
+                # without the prefix, positions [S, S+n_prefix) would never
+                # be written and the page mask (unlike the dense slot_pos
+                # mask) would attend their zero K/V — refuse up front
+                raise ValueError(
+                    f"arch {self.cfg.name!r} has n_prefix={self.cfg.n_prefix}: "
+                    f"request {r.rid} must carry prefix_embeds"
+                )
+            sched.submit(r)
+        meter = DecodeSlackMeter(governor) if governor is not None else None
+        self._last_meter = meter
+        finished: List[Request] = []
+        t_start = time.monotonic()
+        steps = 0
+        while not sched.done:
+            now = time.monotonic() - t_start
+            for req in sched.admit(now):
+                self._join_request(req)
+                tnow = time.monotonic() - t_start
+                if slo is not None:
+                    slo.on_first_token(req, tnow)
+                else:
+                    req.t_first = req.t_prev = tnow
+                if not req.wants_more():
+                    self._retire(req, sched, slo, tnow)
+                    finished.append(req)
+            if sched.n_active == 0:
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                t0 = time.monotonic()
+                wait = (t_start + nxt) - t0
+                if wait > 0:
+                    time.sleep(wait)
+                t1 = time.monotonic()
+                if meter is not None and t1 > t0:
+                    meter.idle(t0, t1)
+                continue
+            for req in sched.active.values():
+                self._grow_pages(req)
+            t0 = time.monotonic()
+            logits, blocks = self._decode(
+                self.params,
+                jnp.asarray(self._tokens),
+                jnp.asarray(self._lengths),
+                jnp.asarray(self._table),
+                self.pool.blocks,
+            )
+            logits = jax.block_until_ready(logits)
+            t1 = time.monotonic()
+            self.pool.blocks = blocks
+            if meter is not None:
+                meter.step(t0, t1, sched.n_active, self.n_slots)
+            greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            tnow = time.monotonic() - t_start
+            for slot, req in list(sched.active.items()):
+                if self.temperature <= 0.0 or req.key is None:
+                    tok = int(greedy[slot])
+                else:
+                    tok = self._select_one(logits[slot], req)
+                req.out.append(tok)
+                self._lengths[slot] += 1
+                self._tokens[slot] = tok
+                if slo is not None:
+                    slo.on_token(req, tnow)
+                else:
+                    req.t_prev = tnow
+                if not req.wants_more():
+                    self._retire(req, sched, slo, tnow)
+                    finished.append(req)
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"serve() exceeded {max_steps} decode steps")
+        return finished
+
+    # ---- ServeEngine-compatible entry point ------------------------------
+    def generate(
+        self,
+        batch: Dict[str, Any],
+        n_steps: int,
+        key: Optional[jax.Array] = None,
+    ) -> jnp.ndarray:
+        """Static-batch compatibility: all rows arrive at t=0, run to n_steps.
+
+        Greedy output matches ``ServeEngine.generate`` token for token.
+        (Sampled output uses per-request keys — ``fold_in(key, row)`` —
+        rather than the legacy shared per-step key.)
+        """
+        tokens = np.asarray(batch["tokens"])
+        b = tokens.shape[0]
+        if b > self.n_slots:
+            raise ValueError(f"batch {b} exceeds n_slots {self.n_slots}")
+        reqs = []
+        for i in range(b):
+            req = Request(
+                prompt=tokens[i], max_new=n_steps, arrival=0.0,
+                key=None if key is None else jax.random.fold_in(key, i),
+            )
+            if "prefix_embeds" in batch:
+                req.prefix_embeds = np.asarray(batch["prefix_embeds"][i])
+            reqs.append(req)
+        order = {r.rid: i for i, r in enumerate(reqs)}
+        done = sorted(self.serve(reqs), key=lambda r: order[r.rid])
+        return jnp.asarray(
+            np.stack([np.asarray(r.out[:n_steps], np.int32) for r in done])
+        )

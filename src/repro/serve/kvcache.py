@@ -1,0 +1,271 @@
+"""Block-paged KV cache pool for continuous-batching serving.
+
+The serving analogue of the paper's slack isolation needs decode batches
+that stay full, and decode batches stay full only if KV memory is handed
+out in small reclaimable units instead of one max-length strip per slot.
+This module provides exactly that:
+
+* :class:`PagedKVPool` — one physical pool of fixed-size pages per
+  attention layer (``k_pages``/``v_pages``: ``(n_pages, page, Hkv, D)``,
+  int8 + per-(token, head) scale pages when ``cfg.kv_quant``, reusing the
+  ``_kv_quantize`` path from :mod:`repro.models.layers`), a host-side
+  free-list allocator with *reservations* (admission control books the
+  worst-case page need up front, physical pages are allocated lazily, so
+  a lazily-grown request can never hit an empty free list), and
+  per-request page tables.  Page id 0 is the scratch page: idle decode
+  slots write into it and nothing ever reads it.
+* ``paged_attention_decode`` — single-token decode attention over the
+  pool: scatter the new K/V into ``table[b, pos // page]``, gather the
+  request's pages back into a ``(B, T, Hkv, D)`` view (the gather *is*
+  the KV read every decode step pays anyway), and run the same
+  fp32-accumulation attention as ``layers.attention_decode`` with a
+  per-request validity mask — so a single request matches the dense-cache
+  engine token for token.
+
+Recurrent state (SSM / RG-LRU blocks) is O(1) per request and is *not*
+paged: the pool keeps a per-slot state tree next to the page arrays.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.layers import NEG_INF, _kv_dequantize, _kv_quantize, _project_qkv
+from repro.models.transformer import stack_layout
+
+Params = Dict[str, Any]
+
+SCRATCH_PAGE = 0          # page id reserved for idle slots; never read
+
+
+def rope_at(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Per-request RoPE for single-token decode.  x: (B,1,H,D); pos: (B,)."""
+    d = x.shape[-1]
+    freqs = L.rope_frequencies(d, theta)                       # (D/2,)
+    angles = pos[:, None].astype(jnp.float32) * freqs          # (B, D/2)
+    cos = jnp.cos(angles)[:, None, None, :]
+    sin = jnp.sin(angles)[:, None, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# device-side pool construction (mirrors transformer.init_cache structure)
+# --------------------------------------------------------------------------
+
+def _attn_page_block(cfg, num_pages: int, page: int, dtype) -> Params:
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    kv_dtype = jnp.int8 if cfg.kv_quant else dtype
+    block = {
+        "k_pages": jnp.zeros((num_pages, page, hkv, hd), kv_dtype),
+        "v_pages": jnp.zeros((num_pages, page, hkv, hd), kv_dtype),
+    }
+    if cfg.kv_quant:
+        block["k_scale_pages"] = jnp.zeros((num_pages, page, hkv), jnp.float32)
+        block["v_scale_pages"] = jnp.zeros((num_pages, page, hkv), jnp.float32)
+    return block
+
+
+def _block_pool(cfg, kind: str, num_pages: int, page: int, n_slots: int, dtype) -> Params:
+    if kind == "attn":
+        return _attn_page_block(cfg, num_pages, page, dtype)
+    if kind == "ssm":
+        return S.init_ssm_state(cfg, n_slots, dtype)
+    if kind == "rglru":
+        return R.init_rglru_state(cfg, n_slots, dtype)
+    raise ValueError(kind)
+
+
+def init_pool_blocks(cfg, num_pages: int, page: int, n_slots: int) -> Params:
+    """Device tree mirroring ``init_cache``: {"stack": {j: block}, "rem": ...}.
+
+    Attention blocks hold shared page arrays; SSM/RG-LRU blocks hold
+    per-slot recurrent state.  Stacked entries carry the scan layer axis.
+    """
+    dtype = L.dtype_of(cfg.compute_dtype)
+    n_full, rem_kinds = stack_layout(cfg)
+    proto = {
+        str(j): _block_pool(cfg, kind, num_pages, page, n_slots, dtype)
+        for j, kind in enumerate(cfg.pattern)
+    }
+    stack = jax.tree.map(lambda a: jnp.tile(a[None], (n_full,) + (1,) * a.ndim), proto)
+    blocks: Params = {"stack": stack}
+    if rem_kinds:
+        blocks["rem"] = {
+            str(j): _block_pool(cfg, kind, num_pages, page, n_slots, dtype)
+            for j, kind in enumerate(rem_kinds)
+        }
+    return blocks
+
+
+# --------------------------------------------------------------------------
+# paged decode attention
+# --------------------------------------------------------------------------
+
+def paged_attention_decode(cfg, p, x, pos, table, block):
+    """Single-token attention over paged KV.
+
+    x: (B,1,d); pos: (B,) int32 write positions (the new token's absolute
+    position per request); table: (B, M) int32 page table (0 = scratch);
+    block: one attention page block.  Returns (out (B,1,d), new block).
+    """
+    b = x.shape[0]
+    page = block["k_pages"].shape[1]
+    m = table.shape[1]
+    q, k, v = _project_qkv(cfg, p, x)                          # (B,1,H*,D)
+    q = rope_at(q, pos, cfg.rope_theta)
+    k = rope_at(k, pos, cfg.rope_theta)
+
+    page_idx = table[jnp.arange(b), jnp.minimum(pos // page, m - 1)]  # (B,)
+    off = pos % page
+    new_block = dict(block)
+    if cfg.kv_quant:
+        kq, k_sc = _kv_quantize(k)                             # (B,1,H,D),(B,1,H)
+        vq, v_sc = _kv_quantize(v)
+        new_block["k_scale_pages"] = block["k_scale_pages"].at[page_idx, off].set(k_sc[:, 0])
+        new_block["v_scale_pages"] = block["v_scale_pages"].at[page_idx, off].set(v_sc[:, 0])
+        k, v = kq, vq
+    new_block["k_pages"] = block["k_pages"].at[page_idx, off].set(k[:, 0])
+    new_block["v_pages"] = block["v_pages"].at[page_idx, off].set(v[:, 0])
+
+    # gather this batch's logical KV views: (B, M, page, H, D) -> (B, T, H, D)
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    t = m * page
+    ck = new_block["k_pages"][table].reshape(b, t, hkv, hd)
+    cv = new_block["v_pages"][table].reshape(b, t, hkv, hd)
+    if cfg.kv_quant:
+        k_sc = new_block["k_scale_pages"][table].reshape(b, t, hkv)
+        v_sc = new_block["v_scale_pages"][table].reshape(b, t, hkv)
+        ck = _kv_dequantize(ck, k_sc, x.dtype)
+        cv = _kv_dequantize(cv, v_sc, x.dtype)
+
+    qg = L._gqa_reshape(q, hkv)                                # (B,1,Hkv,G,D)
+    s = jnp.einsum("bqkgd,btkd->bqkgt", qg, ck, preferred_element_type=jnp.float32)
+    s *= 1.0 / math.sqrt(hd)
+    k_pos = jnp.arange(t, dtype=jnp.int32)
+    valid = k_pos[None, :] <= pos[:, None]                     # (B, T)
+    if cfg.attention in ("swa", "local") and cfg.window:
+        valid &= k_pos[None, :] > pos[:, None] - cfg.window
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bqkgt,btkd->bqkgd", prob.astype(cv.dtype), cv,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    return out, new_block
+
+
+def scatter_prefill_attn(block, cache_block, page_ids, *, stacked: bool):
+    """Scatter a contiguous prefill cache into pool pages.
+
+    cache_block leaves come from ``transformer.prefill`` with batch 1 and
+    a linear layout of ``n_used * page`` positions; ``page_ids``:
+    (n_used,) int32 physical destinations.  ``stacked`` marks entries
+    under the scan layer axis (leaves lead with n_full).
+    """
+    page = block["k_pages"].shape[-3]
+    n_used = page_ids.shape[0]
+    new = dict(block)
+    pairs = [("k", "k_pages"), ("v", "v_pages")]
+    if "k_scale_pages" in block:
+        pairs += [("k_scale", "k_scale_pages"), ("v_scale", "v_scale_pages")]
+    for name, pname in pairs:
+        if stacked:
+            leaf = cache_block[name][:, 0]                     # (n_full, Lpad, ...)
+            chunks = leaf.reshape(leaf.shape[0], n_used, page, *leaf.shape[2:])
+            new[pname] = block[pname].at[:, page_ids].set(
+                chunks.astype(block[pname].dtype)
+            )
+        else:
+            leaf = cache_block[name][0]                        # (Lpad, ...)
+            chunks = leaf.reshape(n_used, page, *leaf.shape[1:])
+            new[pname] = block[pname].at[page_ids].set(chunks.astype(block[pname].dtype))
+    return new
+
+
+# --------------------------------------------------------------------------
+# host-side pool accounting
+# --------------------------------------------------------------------------
+
+class PagedKVPool:
+    """Fixed-size page pool: free-list allocation + admission reservations.
+
+    ``reserve`` is the admission-control primitive: it books a request's
+    *worst-case* page need against the pool; ``alloc`` then hands out
+    physical pages lazily (prefill pages at join, one page per crossed
+    boundary during decode).  Because allocations never exceed the sum of
+    reservations, lazy growth can never fail after admission succeeded.
+    ``release`` returns everything on completion (evict-on-EOS).
+    """
+
+    def __init__(self, cfg, n_slots: int, max_len: int, page: int = 16,
+                 num_pages: Optional[int] = None):
+        if max_len % page:
+            raise ValueError(f"max_len {max_len} must be a multiple of page {page}")
+        self.cfg = cfg
+        self.page = page
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.max_pages_per_req = max_len // page
+        # +1 for the scratch page idle slots write into
+        self.num_pages = num_pages or n_slots * self.max_pages_per_req + 1
+        if self.num_pages < 2:
+            raise ValueError("pool needs at least one non-scratch page")
+        self._free: List[int] = list(range(self.num_pages - 1, SCRATCH_PAGE, -1))
+        self._reserved: Dict[Any, int] = {}    # rid -> pages still reservable
+        self._allocated: Dict[Any, List[int]] = {}
+        self.blocks = init_pool_blocks(cfg, self.num_pages, page, n_slots)
+
+    # ---- accounting ------------------------------------------------------
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page)
+
+    @property
+    def capacity_pages(self) -> int:
+        return self.num_pages - 1
+
+    @property
+    def free_pages(self) -> int:
+        """Pages available to NEW reservations (free minus outstanding IOUs)."""
+        outstanding = sum(self._reserved.values())
+        return len(self._free) - outstanding
+
+    @property
+    def utilization(self) -> float:
+        in_use = self.capacity_pages - len(self._free)
+        return in_use / max(self.capacity_pages, 1)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.pages_needed(n_tokens) <= self.free_pages
+
+    def reserve(self, rid, n_tokens: int) -> bool:
+        need = self.pages_needed(n_tokens)
+        if need > self.capacity_pages:
+            raise ValueError(
+                f"request {rid!r} needs {need} pages, pool holds {self.capacity_pages}"
+            )
+        if need > self.free_pages:
+            return False
+        self._reserved[rid] = need
+        self._allocated[rid] = []
+        return True
+
+    def alloc(self, rid, n: int = 1) -> List[int]:
+        if self._reserved.get(rid, 0) < n:
+            raise RuntimeError(f"request {rid!r} exceeded its page reservation")
+        ids = [self._free.pop() for _ in range(n)]
+        self._reserved[rid] -= n
+        self._allocated[rid].extend(ids)
+        return ids
+
+    def release(self, rid) -> None:
+        self._free.extend(reversed(self._allocated.pop(rid, [])))
+        self._reserved.pop(rid, None)

@@ -1,0 +1,64 @@
+"""Decode-slack governor bridge: price serving underfill like MPI slack.
+
+The paper isolates the slack inside a blocking collective with an
+artificial barrier and spends it at the minimum P-state.  A serving
+engine has the exact analogue in two forms:
+
+* **underfill** — a decode step dispatched with ``filled < capacity``
+  slots does full-width work but only ``filled/capacity`` of it moves
+  payload; the empty fraction of the step is slack;
+* **idle gaps** — wall time between the last completion and the next
+  arrival, a whole phase of pure slack.
+
+:class:`DecodeSlackMeter` maps both onto the governor's phase-event
+vocabulary through :meth:`repro.core.governor.Governor.ingest_phase`
+(the non-collective event source): a decode step spanning ``[t0, t1]``
+with ``f`` of ``C`` slots filled becomes ``barrier_enter`` at ``t0``,
+``barrier_exit`` (slack end) at ``t0 + (t1-t0)·(1 - f/C)`` and
+``copy_exit`` at ``t1`` — so ``finalize()`` prices underfill in joules
+with the same ``theta_eff`` timeout filter, and idle intervals book
+``set_pstate_min``/``restore_pstate_max`` actuation pairs, exactly as a
+blocked MPI rank would.
+
+Call ids live in a private namespace (upper bit set) so meter phases can
+never collide with the instrumented-collective counter.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Optional
+
+from repro.core.governor import Governor
+
+_CALL_ID_BASE = 1 << 20
+
+
+class DecodeSlackMeter:
+    """Feeds decode underfill + idle gaps into a :class:`Governor`."""
+
+    def __init__(self, governor: Governor, rank: int = 0):
+        self.governor = governor
+        self.rank = rank
+        self._ids = itertools.count(_CALL_ID_BASE)
+        self.n_steps = 0
+        self.n_idle = 0
+        self.slot_steps_filled = 0
+        self.slot_steps_total = 0
+
+    def step(self, t0: float, t1: float, filled: int, capacity: int) -> None:
+        """One decode step: the unfilled slot fraction of [t0, t1] is slack."""
+        self.n_steps += 1
+        self.slot_steps_filled += filled
+        self.slot_steps_total += capacity
+        underfill = 1.0 - filled / max(capacity, 1)
+        t_slack_end = t0 + (t1 - t0) * underfill
+        self.governor.ingest_phase(self.rank, next(self._ids), t0, t_slack_end, t1)
+
+    def idle(self, t0: float, t1: float) -> None:
+        """An inter-arrival gap with zero active slots: pure slack."""
+        self.n_idle += 1
+        self.governor.ingest_phase(self.rank, next(self._ids), t0, t1, t1)
+
+    @property
+    def fill_fraction(self) -> float:
+        return self.slot_steps_filled / max(self.slot_steps_total, 1)

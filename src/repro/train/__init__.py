@@ -1,0 +1,38 @@
+"""``repro.train`` — step builders, optimizer, and synthetic data.
+
+``loop``       :func:`make_train_step` (jit) and :func:`make_pod_train_step`
+               (pod-explicit shard_map with instrumented collectives), plus
+               :class:`TrainConfig` / :func:`init_state`.
+``optimizer``  pure-pytree AdamW: :class:`OptConfig`, :func:`adamw_update`,
+               warmup-cosine :func:`schedule`, :func:`global_norm`.
+``data``       :class:`SyntheticCorpus` / :class:`DataLoader` deterministic
+               token streams for smoke and benchmark runs.
+"""
+from repro.train.data import DataLoader, SyntheticCorpus  # noqa: F401
+from repro.train.loop import (  # noqa: F401
+    TrainConfig,
+    init_state,
+    make_pod_train_step,
+    make_train_step,
+)
+from repro.train.optimizer import (  # noqa: F401
+    OptConfig,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+    schedule,
+)
+
+__all__ = [
+    "DataLoader",
+    "OptConfig",
+    "SyntheticCorpus",
+    "TrainConfig",
+    "adamw_update",
+    "global_norm",
+    "init_opt_state",
+    "init_state",
+    "make_pod_train_step",
+    "make_train_step",
+    "schedule",
+]
