@@ -1,0 +1,119 @@
+"""Cluster benchmark: slack-driven cap arbitration vs static equal-split.
+
+A heterogeneous two-job mix — one compute-bound (EP-like, every watt is
+progress) and one bursty-serve (decode-shaped, watts above the floor are
+stranded in slack) — runs twice under the same fixed cluster cap:
+
+* **static** — cap / n_jobs forever, the facility default;
+* **arbiter** — :class:`PowerBudgetArbiter` re-splits each epoch on the
+  jobs' exploited-slack ratios (AIMD, per-job floor).
+
+The cap is sized *tight* (below the mix's aggregate f_max demand): that is
+the regime the arbiter exists for — equal split strands watts in the
+slack-rich job while pinning the critical job below the energy-optimal
+frequency, so redistribution wins on both axes.  The acceptance bar
+mirrors the paper's performance-neutrality: lower total energy at <= 1 %
+makespan overhead.
+
+Also times the trace layer: record a synthetic governor stream, replay it
+through a fresh governor, and assert the slack/energy totals reproduce
+bit-for-bit (the record/replay contract the offline what-if loop rests
+on).
+
+Emits the standard ``name,us_per_call,derived`` CSV contract plus a JSON
+artifact.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, time_call
+
+CAP_W = 100.0
+FLOOR_W = 15.0
+
+
+def _mix(floor_w: float = FLOOR_W):
+    from repro.cluster import make_job
+
+    return [
+        make_job("compute_bound", seed=1, floor_w=floor_w),
+        make_job("bursty_serve", seed=2, floor_w=floor_w),
+    ]
+
+
+def _trace_roundtrip(n_calls: int, n_ranks: int = 8):
+    from repro.core.governor import Governor
+    from repro.cluster.trace import TraceRecorder, replay
+
+    rec = TraceRecorder()
+    gov = Governor(recorder=rec)
+    rng = np.random.default_rng(0)
+    t = 1.0
+    for call in range(n_calls):
+        arrivals = t + rng.uniform(0.0, 3e-3, n_ranks)
+        release = float(arrivals.max())
+        for r in range(n_ranks):
+            gov.sink(r, "barrier_enter", call, float(arrivals[r]))
+        for r in range(n_ranks):
+            gov.sink(r, "barrier_exit", call, release)
+            gov.sink(r, "copy_exit", call, release + 0.5e-3)
+        t = release + 5e-3
+    live = gov.finalize()
+    records = rec.records()
+
+    def run_replay():
+        _, rep = replay(records)
+        return rep
+
+    us, rep = time_call(run_replay)
+    exact = (
+        rep.total_slack == live.total_slack
+        and rep.total_copy == live.total_copy
+        and rep.energy_baseline == live.energy_baseline
+        and rep.energy_policy == live.energy_policy
+        and rep.n_calls == live.n_calls
+    )
+    return us, len(records), exact
+
+
+def run(full: bool = False) -> dict:
+    from repro.cluster import PowerBudgetArbiter, StaticEqualSplit, run_coschedule
+
+    static = run_coschedule(
+        _mix(), CAP_W, arbiter=StaticEqualSplit(cap_w=CAP_W, floor_w=FLOOR_W)
+    )
+    arbited = run_coschedule(
+        _mix(), CAP_W, arbiter=PowerBudgetArbiter(cap_w=CAP_W, floor_w=FLOOR_W)
+    )
+
+    overhead_pct = 100.0 * (arbited.makespan_s / static.makespan_s - 1.0)
+    saving_pct = 100.0 * (1.0 - arbited.energy_j / static.energy_j)
+    wins = saving_pct > 0.0 and overhead_pct <= 1.0
+
+    emit("cluster.static_split", static.makespan_s * 1e6 / max(static.energy_j, 1),
+         f"makespan={static.makespan_s:.2f}s;energy={static.energy_j:.0f}J")
+    emit("cluster.arbiter", arbited.makespan_s * 1e6 / max(arbited.energy_j, 1),
+         f"makespan={arbited.makespan_s:.2f}s;energy={arbited.energy_j:.0f}J")
+    emit("cluster.arbiter_vs_static", abs(overhead_pct),
+         f"energy_saving={saving_pct:.2f}%;overhead={overhead_pct:.2f}%;wins={wins}")
+
+    n_calls = 2000 if full else 400
+    us, n_records, exact = _trace_roundtrip(n_calls)
+    emit("cluster.trace_replay", us / max(n_records, 1),
+         f"records={n_records};bitwise_exact={exact}")
+
+    payload = {
+        "cap_w": CAP_W,
+        "floor_w": FLOOR_W,
+        "static": static.summary(),
+        "arbiter": arbited.summary(),
+        "arbiter_allocations": arbited.allocations,
+        "energy_saving_pct": saving_pct,
+        "makespan_overhead_pct": overhead_pct,
+        "arbiter_wins": wins,
+        "trace_replay": {"n_records": n_records, "us_per_record": us / max(n_records, 1),
+                         "bitwise_exact": exact},
+    }
+    save_json("bench_cluster", payload)
+    return payload

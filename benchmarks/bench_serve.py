@@ -98,7 +98,7 @@ def run(full: bool = False) -> dict:
     rep = gov.finalize()
     meter = cont_eng._last_meter
     slack_j = rep.energy_baseline - rep.energy_policy
-    pairs = sum(1 for _, _, a in gov.actuation_log if a == "set_pstate_min")
+    pairs = sum(1 for a in gov.actuation_log if a.action == "set_pstate_min")
 
     emit("serve.static_tok_s", dt_s * 1e6 / max(tok_s, 1), f"{static_tok_s:.1f}tok_s")
     emit("serve.continuous_tok_s", dt_c * 1e6 / max(tok_c, 1),
@@ -115,13 +115,9 @@ def run(full: bool = False) -> dict:
             "speedup": cont_tok_s / max(static_tok_s, 1e-9),
         },
         "slack": {
-            "total_slack_s": rep.total_slack,
-            "exploited_slack_s": rep.exploited_slack,
-            "energy_baseline_J": rep.energy_baseline,
-            "energy_policy_J": rep.energy_policy,
+            **rep.to_dict(),
             "slack_J_saved": slack_j,
             "downshift_pairs": pairs,
-            "energy_saving_pct": rep.energy_saving_pct,
         },
         "slo": slo.summary(),
     }

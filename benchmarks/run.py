@@ -11,6 +11,7 @@ full JSON artifacts under artifacts/.
   runtime — framework micro-benchmarks (simulator/governor/barrier cost)
   dist    — distribution substrate (int8 compressed_psum, straggler detector)
   serve   — static vs continuous batching tok/s + priced decode slack
+  cluster — slack-driven cap arbiter vs static equal-split + trace replay
 
 ``python -m benchmarks.run [--only table3,roofline] [--full]``
 """
@@ -28,6 +29,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        bench_cluster,
         bench_dist,
         bench_runtime,
         bench_serve,
@@ -44,6 +46,7 @@ def main() -> None:
         "runtime": bench_runtime.run,
         "dist": bench_dist.run,
         "serve": bench_serve.run,
+        "cluster": bench_cluster.run,
         "table1": table1_predictability.run,
         "fig3": fig3_feature_importance.run,
         "roofline": roofline.run,

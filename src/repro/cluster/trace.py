@@ -1,0 +1,223 @@
+"""Durable run traces: record the governor's event stream, replay offline.
+
+The live runtime is ephemeral — phase events stream through the governor
+and are gone.  :class:`TraceRecorder` makes the stream durable: a bounded
+ring buffer of exactly the records the governor consumes (instrument
+phase events, fully-formed ingested phases) plus the actuations it
+emits, serialized as versioned JSONL.  Because the capture *is* the
+governor's input, :func:`replay` pushes a recorded trace through a fresh
+:class:`~repro.core.governor.Governor` and reproduces the live run's
+slack/copy/energy totals bit-for-bit (tier-1 asserted), and
+:func:`to_workload` lifts the same records into a
+``core.simulator.Workload`` so :func:`what_if` can re-run the measured
+phases under a different policy, HwModel, or power cap — the offline
+what-if loop the cap arbiter is tuned against.
+
+Record kinds (one JSON object per line; line 1 is the header):
+
+  {"k": "hdr", "version": 1, "meta": {...}}
+  {"k": "ev",    "rank": R, "phase": P, "call": C, "t": T}
+  {"k": "phase", "rank": R, "call": C, "t0": .., "t1": .., "t2": ..}
+  {"k": "act",   "t": T, "rank": R, "action": A, "call": C, "slack": S}
+
+Floats round-trip through ``repr`` so replay sees the identical bits.
+"""
+from __future__ import annotations
+
+import collections
+import json
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.governor import Actuation, Governor, GovernorReport
+from repro.core.policies import COUNTDOWN_SLACK, Policy
+from repro.core.pstate import DEFAULT_HW, HwModel
+from repro.core.simulator import SimResult, Workload, simulate
+
+TRACE_VERSION = 1
+
+
+class TraceRecorder:
+    """Ring-buffered, versioned capture of a governor's event stream.
+
+    Attach via ``Governor(recorder=rec)`` (captures sink events, ingested
+    phases, and actuations) or ``instrument.set_event_tee(rec.on_event)``
+    (sink-less capture of the raw collective events).
+    """
+
+    def __init__(self, capacity: int = 1_000_000, meta: Optional[Dict] = None):
+        self._buf: collections.deque = collections.deque(maxlen=capacity)
+        self.capacity = capacity
+        self.meta = dict(meta or {})
+        self.n_seen = 0
+
+    # ---- capture hooks (the Governor's recorder interface) ---------------
+    def on_event(self, rank: int, phase: str, call_id: int, t: float) -> None:
+        self._append({"k": "ev", "rank": int(rank), "phase": phase,
+                      "call": int(call_id), "t": float(t)})
+
+    def on_phase(self, rank: int, call_id: int, t0: float, t1: float, t2: float) -> None:
+        self._append({"k": "phase", "rank": int(rank), "call": int(call_id),
+                      "t0": float(t0), "t1": float(t1), "t2": float(t2)})
+
+    def on_actuation(self, act: Actuation) -> None:
+        self._append({"k": "act", "t": float(act.t), "rank": int(act.rank),
+                      "action": act.action, "call": int(act.call_id),
+                      "slack": float(act.slack)})
+
+    def _append(self, rec: Dict) -> None:
+        self.n_seen += 1
+        self._buf.append(rec)
+
+    # ---- access / persistence -------------------------------------------
+    @property
+    def n_dropped(self) -> int:
+        """Records evicted by the ring bound (oldest-first)."""
+        return self.n_seen - len(self._buf)
+
+    def records(self) -> List[Dict]:
+        return list(self._buf)
+
+    def save(self, path: str) -> str:
+        header = {"k": "hdr", "version": TRACE_VERSION, "meta": self.meta,
+                  "n_records": len(self._buf), "n_dropped": self.n_dropped}
+        with open(path, "w") as f:
+            f.write(json.dumps(header) + "\n")
+            for rec in self._buf:
+                f.write(json.dumps(rec) + "\n")
+        return path
+
+
+def load(path: str, allow_truncated: bool = False) -> Tuple[Dict, List[Dict]]:
+    """(header, records) from a JSONL trace; rejects unknown versions.
+
+    A trace whose ring buffer evicted records (``n_dropped > 0`` in the
+    header) cannot replay faithfully — enter events may be missing their
+    exits — so it is refused unless ``allow_truncated`` is passed.
+    """
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    if not lines:
+        raise ValueError(f"empty trace file: {path}")
+    header = json.loads(lines[0])
+    if header.get("k") != "hdr":
+        raise ValueError(f"{path}: first record is {header.get('k')!r}, not a header")
+    if header.get("version") != TRACE_VERSION:
+        raise ValueError(
+            f"{path}: trace version {header.get('version')!r} != {TRACE_VERSION}"
+        )
+    if header.get("n_dropped", 0) > 0 and not allow_truncated:
+        raise ValueError(
+            f"{path}: ring buffer dropped {header['n_dropped']} records — the "
+            f"stream is truncated and will not replay exactly; pass "
+            f"allow_truncated=True to load anyway"
+        )
+    return header, [json.loads(ln) for ln in lines[1:]]
+
+
+def replay(
+    records: List[Dict],
+    policy: Policy = COUNTDOWN_SLACK,
+    hw: HwModel = DEFAULT_HW,
+    governor: Optional[Governor] = None,
+) -> Tuple[Governor, GovernorReport]:
+    """Feed a recorded stream through a (fresh) governor, in capture order.
+
+    With the same policy/hw as the live run this reproduces its report
+    exactly; with a different policy/theta it is the cheapest what-if.
+    ``act`` records are outputs of the live governor and are skipped —
+    the replayed governor re-derives its own.
+    """
+    gov = governor if governor is not None else Governor(policy=policy, hw=hw)
+    for r in records:
+        if r["k"] == "ev":
+            gov.sink(r["rank"], r["phase"], r["call"], r["t"])
+        elif r["k"] == "phase":
+            gov.ingest_phase(r["rank"], r["call"], r["t0"], r["t1"], r["t2"])
+    return gov, gov.finalize()
+
+
+def to_workload(records: List[Dict], name: str = "replayed",
+                beta_comp: float = 0.3, beta_copy: float = 0.15) -> Workload:
+    """Lift recorded phases into a ``Workload`` the simulator can re-run.
+
+    Occurrences are reconstructed with the governor's rotation rule (a
+    rank re-entering a call id starts a new occurrence); per-rank compute
+    is the gap from that rank's previous phase end to its barrier enter
+    (a rank's first phase anchors to the occurrence's earliest enter), so
+    the simulator's emergent barrier reproduces the recorded arrival
+    pattern, and recorded copy durations become copy work at f_max.
+    Collective slack therefore survives the lift exactly; single-rank
+    ingested phases (serve underfill/idle) have no arrival imbalance to
+    re-emerge from and contribute compute+copy only.
+    """
+    # normalize both record kinds into per-occurrence {rank: [t0, t1, t2]}
+    open_calls: Dict[int, Dict[int, List[float]]] = {}
+    order: List[Tuple[int, Dict[int, List[float]]]] = []
+    for r in records:
+        if r["k"] == "phase":
+            order.append((r["call"], {r["rank"]: [r["t0"], r["t1"], r["t2"]]}))
+        elif r["k"] == "ev":
+            rank, call = r["rank"], r["call"]
+            occ = open_calls.get(call)
+            if r["phase"] == "barrier_enter":
+                if occ is None or rank in occ:
+                    occ = {}
+                    open_calls[call] = occ
+                    order.append((call, occ))
+                occ[rank] = [r["t"], r["t"], r["t"]]
+            elif occ is not None and rank in occ:
+                if r["phase"] == "barrier_exit":
+                    occ[rank][1] = occ[rank][2] = r["t"]
+                elif r["phase"] == "copy_exit":
+                    occ[rank][2] = r["t"]
+
+    ranks = sorted({rk for _, occ in order for rk in occ})
+    if not ranks:
+        raise ValueError("trace contains no phase records")
+    rank_pos = {rk: i for i, rk in enumerate(ranks)}
+    n, t_tasks = len(ranks), len(order)
+    comp = np.zeros((t_tasks, n))
+    copy = np.zeros(t_tasks)
+    copy_rank = np.zeros((t_tasks, n))
+    site = np.zeros(t_tasks, np.int64)
+    site_of: Dict[int, int] = {}
+    prev_end = {rk: None for rk in ranks}
+    for k, (call, occ) in enumerate(order):
+        site[k] = site_of.setdefault(call, len(site_of))
+        t_base = min(t0 for t0, _, _ in occ.values())
+        for rk, (t0, t1, t2) in occ.items():
+            start = prev_end[rk] if prev_end[rk] is not None else t_base
+            comp[k, rank_pos[rk]] = max(t0 - start, 0.0)
+            prev_end[rk] = t2
+            copy_rank[k, rank_pos[rk]] = max(t2 - t1, 0.0)
+        copy[k] = float(np.mean([copy_rank[k, rank_pos[rk]] for rk in occ])) if occ else 0.0
+    # per-rank copy durations survive through the jitter channel, so the
+    # simulated phase ends match each recorded t2, not just the task mean
+    with np.errstate(invalid="ignore", divide="ignore"):
+        copy_jitter = np.where(copy[:, None] > 0, copy_rank / copy[:, None], 1.0)
+    return Workload(
+        name=name, n_ranks=n, comp=comp, copy=copy,
+        is_p2p=np.zeros(t_tasks, bool), partner=np.zeros((t_tasks, n), np.int64),
+        site=site, nbytes=np.zeros(t_tasks),
+        beta_comp=beta_comp, beta_copy=beta_copy,
+        copy_jitter=copy_jitter,
+    )
+
+
+def what_if(
+    records: List[Dict],
+    policy: Policy,
+    hw: HwModel = DEFAULT_HW,
+    power_cap: Optional[float] = None,
+    beta_comp: float = 0.3,
+    beta_copy: float = 0.15,
+    power_dt: Optional[float] = None,
+) -> SimResult:
+    """Re-run a recorded trace through ``core.simulator`` under a different
+    policy and/or cap: the offline answer to "what would this run have
+    cost under theta X / cap Y" without touching the cluster."""
+    wl = to_workload(records, beta_comp=beta_comp, beta_copy=beta_copy)
+    res, _ = simulate(wl, policy, hw, power_dt=power_dt, power_cap=power_cap)
+    return res

@@ -1,1 +1,67 @@
-"""COUNTDOWN Slack core: the paper's contribution as a composable JAX module."""
+"""COUNTDOWN Slack core: the paper's contribution as a composable JAX module.
+
+The public surface, explicitly (the same treatment ``serve``/``train``/
+``launch`` got): the :class:`Governor` pipeline, the instrument-mode
+helpers (``cd_*`` collectives, ambient mode switches, event sink/tee), the
+calibrated :class:`HwModel`, the policy table, and the simulator entry
+points.  Symbols resolve lazily (PEP 562) so ``import repro.core`` stays
+cheap for tooling — ``instrument`` in particular pulls in jax.
+"""
+import importlib
+
+_EXPORTS = {
+    # governor pipeline
+    "Actuation": "repro.core.governor",
+    "Governor": "repro.core.governor",
+    "GovernorReport": "repro.core.governor",
+    "IntervalStats": "repro.core.governor",
+    # instrument mode helpers (jax-bearing; loaded on first touch)
+    "cd_all_gather": "repro.core.instrument",
+    "cd_pmean": "repro.core.instrument",
+    "cd_ppermute": "repro.core.instrument",
+    "cd_psum": "repro.core.instrument",
+    "enable_events": "repro.core.instrument",
+    "get_mode": "repro.core.instrument",
+    "set_event_sink": "repro.core.instrument",
+    "set_event_tee": "repro.core.instrument",
+    "set_mode": "repro.core.instrument",
+    # hardware / power model
+    "DEFAULT_HW": "repro.core.pstate",
+    "HwModel": "repro.core.pstate",
+    # policies
+    "ALL_POLICIES": "repro.core.policies",
+    "BASELINE": "repro.core.policies",
+    "COUNTDOWN": "repro.core.policies",
+    "COUNTDOWN_SLACK": "repro.core.policies",
+    "MINFREQ": "repro.core.policies",
+    "Policy": "repro.core.policies",
+    # simulator entry points
+    "SimResult": "repro.core.simulator",
+    "TraceRecord": "repro.core.simulator",
+    "Workload": "repro.core.simulator",
+    "coverage_on_trace": "repro.core.simulator",
+    "simulate": "repro.core.simulator",
+    # calibrated workload generators
+    "APPS": "repro.core.workloads",
+    "generate": "repro.core.workloads",
+    "make_all": "repro.core.workloads",
+}
+
+_SUBMODULES = (
+    "governor", "instrument", "policies", "predictor", "profiler",
+    "pstate", "simulator", "workloads",
+)
+
+__all__ = sorted(_EXPORTS) + list(_SUBMODULES)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.core.{name}")
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -7,16 +7,36 @@ slack/copy durations, applies the configured policy's timeout decision, logs
 the P-state actuation it *would* issue (on Intel: wrmsr via MSR_SAFE; on a
 TPU host: SMC power capping — see DESIGN.md §2), estimates energy via the
 calibrated HwModel, and feeds the straggler detector.
+
+Two consumers added for the cluster layer (DESIGN.md §7) hang off the same
+event stream: an optional :class:`~repro.cluster.trace.TraceRecorder` tees
+every event/phase/actuation the governor books (so a run can be replayed
+offline, bit-for-bit), and :meth:`Governor.interval_snapshot` reports the
+slack/energy booked since the previous snapshot — the per-epoch
+exploited-slack ratio the :class:`~repro.cluster.arbiter.PowerBudgetArbiter`
+redistributes watts on.
 """
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 from repro.core.policies import COUNTDOWN_SLACK, Policy
 from repro.core.pstate import DEFAULT_HW, HwModel
 from repro.dist.straggler import StragglerDetector
+
+
+class Actuation(NamedTuple):
+    """One P-state command the runtime would issue (structured so the trace
+    recorder and benchmarks can consume it without attribute scraping).
+    Index layout keeps the legacy ``(t, rank, action)`` prefix."""
+
+    t: float
+    rank: int
+    action: str              # "set_pstate_min" | "restore_pstate_max"
+    call_id: int
+    slack: float             # the slack duration that triggered the pair
 
 
 @dataclass
@@ -41,9 +61,48 @@ class GovernorReport:
 
     @property
     def energy_saving_pct(self) -> float:
+        # energy_policy can dip epsilon-negative when float cancellation
+        # meets zero-length phases; clamp both edges so the percentage
+        # stays in [0, 100] instead of exceeding it by rounding artifacts
         if self.energy_baseline <= 0:
             return 0.0
-        return 100.0 * (1.0 - self.energy_policy / self.energy_baseline)
+        return 100.0 * (1.0 - max(self.energy_policy, 0.0) / self.energy_baseline)
+
+    def to_dict(self) -> Dict[str, object]:
+        """JSON-ready view (trace artifacts, benchmarks) — one place, not
+        per-consumer attribute scraping."""
+        return {
+            "n_calls": int(self.n_calls),
+            "n_downshifts": int(self.n_downshifts),
+            "total_slack": float(self.total_slack),
+            "total_copy": float(self.total_copy),
+            "exploited_slack": float(self.exploited_slack),
+            "energy_baseline": float(self.energy_baseline),
+            "energy_policy": float(self.energy_policy),
+            "energy_saving_pct": float(self.energy_saving_pct),
+            "straggler_summary": {int(r): float(v) for r, v in self.straggler_summary.items()},
+            "stragglers": [[int(r), float(z)] for r, z in self.stragglers],
+        }
+
+
+@dataclass
+class IntervalStats:
+    """Slack/energy booked between two ``interval_snapshot`` calls."""
+
+    n_calls: int
+    n_downshifts: int
+    slack: float
+    copy: float
+    busy: float                      # sum over ranks of enter->copy_end spans
+    exploited: float
+    energy_baseline: float
+    energy_policy: float
+
+    @property
+    def exploited_ratio(self) -> float:
+        """Fraction of instrumented rank-time the policy spent at f_min —
+        the arbiter's signal that this job has watts to give away."""
+        return self.exploited / self.busy if self.busy > 0 else 0.0
 
 
 class Governor:
@@ -54,20 +113,37 @@ class Governor:
         policy: Policy = COUNTDOWN_SLACK,
         hw: HwModel = DEFAULT_HW,
         detector: Optional[StragglerDetector] = None,
+        recorder=None,
     ):
         self.policy = policy
         self.hw = hw
         self.detector = detector or StragglerDetector()
+        self.recorder = recorder     # cluster.trace.TraceRecorder-compatible
         # call_ids are assigned at TRACE time, so the same id recurs on every
         # executed step: rotate to a fresh occurrence when a rank re-enters
         self._calls: Dict[int, CallRecord] = {}
         self._done: List[CallRecord] = []
+        self._mark = 0               # interval_snapshot high-water mark
         self._lock = threading.Lock()
-        self.actuation_log: List[Tuple[float, int, str]] = []   # (t, rank, action)
+        self.actuation_log: List[Actuation] = []
+
+    def _actuate(self, t: float, rank: int, call_id: int, slack: float) -> None:
+        pair = (
+            Actuation(t, rank, "set_pstate_min", call_id, slack),
+            Actuation(t, rank, "restore_pstate_max", call_id, slack),
+        )
+        self.actuation_log.extend(pair)
+        if self.recorder is not None:
+            for act in pair:
+                self.recorder.on_actuation(act)
 
     # the instrument event sink ------------------------------------------------
     def sink(self, rank: int, phase: str, call_id: int, t: float) -> None:
         with self._lock:
+            # recorded under the lock: the trace order must be the order the
+            # governor processed events in, or replay() loses bit-exactness
+            if self.recorder is not None:
+                self.recorder.on_event(rank, phase, call_id, t)
             rec = self._calls.setdefault(call_id, CallRecord(call_id))
             if phase == "barrier_enter" and rank in rec.enter:
                 self._done.append(rec)                          # new occurrence
@@ -81,8 +157,7 @@ class Governor:
                 if slack >= self.policy.theta and self.policy.comm_mode in (
                     "timeout", "predict_timeout",
                 ):
-                    self.actuation_log.append((t, rank, "set_pstate_min"))
-                    self.actuation_log.append((t, rank, "restore_pstate_max"))
+                    self._actuate(t, rank, call_id, slack)
             elif phase == "copy_exit":
                 rec.copy_end[rank] = t
 
@@ -102,30 +177,32 @@ class Governor:
         streaming enter/exit events; this books the same CallRecord and the
         same timeout-policy actuation the event-sink path would.
         """
+        if t_copy_end is None:
+            t_copy_end = t_slack_end
         rec = CallRecord(call_id)
         rec.enter[rank] = t_enter
         rec.slack_end[rank] = t_slack_end
-        rec.copy_end[rank] = t_copy_end if t_copy_end is not None else t_slack_end
+        rec.copy_end[rank] = t_copy_end
         with self._lock:
+            if self.recorder is not None:
+                self.recorder.on_phase(rank, call_id, t_enter, t_slack_end, t_copy_end)
             self._done.append(rec)
             slack = t_slack_end - t_enter
             if slack >= self.policy.theta and self.policy.comm_mode in (
                 "timeout", "predict_timeout",
             ):
-                self.actuation_log.append((t_slack_end, rank, "set_pstate_min"))
-                self.actuation_log.append((t_slack_end, rank, "restore_pstate_max"))
+                self._actuate(t_slack_end, rank, call_id, slack)
 
-    def finalize(self) -> GovernorReport:
+    # accounting ---------------------------------------------------------------
+    def _tally(self, records: List[CallRecord]) -> Tuple[int, float, float, float, float, float, float]:
+        """(n_down, slack, copy, busy, exploited, e_base, e_policy) over
+        ``records`` — the shared math behind finalize() and snapshots."""
         hw, pol = self.hw, self.policy
         theta_eff = pol.theta + 0.5 * hw.switch_latency
         n_down = 0
-        tot_slack = tot_copy = exploited = 0.0
+        tot_slack = tot_copy = busy = exploited = 0.0
         e_base = e_pol = 0.0
-        all_records = self._done + list(self._calls.values())
-        n_total = len(all_records)
-        for rec in all_records:
-            if rec.enter:
-                self.detector.observe_barrier(rec.enter)
+        for rec in records:
             for rank, t0 in rec.enter.items():
                 t1 = rec.slack_end.get(rank)
                 if t1 is None:
@@ -134,6 +211,7 @@ class Governor:
                 tot_slack += slack
                 copy = max(rec.copy_end.get(rank, t1) - t1, 0.0)
                 tot_copy += copy
+                busy += slack + copy
                 e_base += hw.watts(hw.f_max, hw.act_slack) * slack
                 e_base += hw.watts(hw.f_max, hw.act_copy) * copy
                 low = max(slack - theta_eff, 0.0)
@@ -146,8 +224,39 @@ class Governor:
                     e_pol += hw.watts(hw.f_min, hw.act_copy) * copy
                 else:
                     e_pol += hw.watts(hw.f_max, hw.act_copy) * copy
+        return n_down, tot_slack, tot_copy, busy, exploited, e_base, e_pol
+
+    def interval_snapshot(self) -> IntervalStats:
+        """Stats over the phases completed since the previous snapshot.
+
+        Non-destructive (finalize() still sees everything) and does not
+        feed the straggler detector — it is the arbiter's per-epoch poll,
+        not the end-of-run report.  In-flight occurrences are picked up by
+        a later snapshot once they rotate into the done list.
+        """
+        with self._lock:
+            records = self._done[self._mark:]
+            self._mark = len(self._done)
+        n_down, slack, copy, busy, exploited, e_base, e_pol = self._tally(records)
+        return IntervalStats(
+            n_calls=len(records),
+            n_downshifts=n_down,
+            slack=slack,
+            copy=copy,
+            busy=busy,
+            exploited=exploited,
+            energy_baseline=e_base,
+            energy_policy=e_pol,
+        )
+
+    def finalize(self) -> GovernorReport:
+        all_records = self._done + list(self._calls.values())
+        for rec in all_records:
+            if rec.enter:
+                self.detector.observe_barrier(rec.enter)
+        n_down, tot_slack, tot_copy, _, exploited, e_base, e_pol = self._tally(all_records)
         return GovernorReport(
-            n_calls=n_total,
+            n_calls=len(all_records),
             n_downshifts=n_down,
             total_slack=tot_slack,
             total_copy=tot_copy,
@@ -162,4 +271,5 @@ class Governor:
         with self._lock:
             self._calls.clear()
             self._done.clear()
+            self._mark = 0
             self.actuation_log.clear()

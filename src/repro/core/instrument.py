@@ -33,6 +33,7 @@ AxisNames = Union[str, Sequence[str]]
 _MODE = "off"
 _EVENTS_ENABLED = False
 _SINK: Optional[Callable[[int, str, int, float], None]] = None
+_TEE: Optional[Callable[[int, str, int, float], None]] = None
 _LOCK = threading.Lock()
 _CALL_COUNTER = [0]
 
@@ -63,12 +64,28 @@ def set_event_sink(sink: Optional[Callable[[int, str, int, float], None]]) -> No
     _SINK = sink
 
 
+def set_event_tee(tee: Optional[Callable[[int, str, int, float], None]]) -> None:
+    """Install a secondary consumer fed the identical (rank, phase, call_id,
+    t) stream — e.g. a :class:`repro.cluster.trace.TraceRecorder` recording
+    a run the governor is not attached to.  When the recorder hangs off a
+    live :class:`~repro.core.governor.Governor` instead, prefer the
+    governor's ``recorder`` hook (it also captures ingested phases and
+    actuations); the tee exists for sink-less recording.
+    """
+    global _TEE
+    _TEE = tee
+
+
 def _emit(rank, phase_code, call_id) -> None:
     """Host-side callback: timestamp and forward to the governor sink."""
-    if _SINK is None:
+    if _SINK is None and _TEE is None:
         return
     phase = {0: "barrier_enter", 1: "barrier_exit", 2: "copy_exit"}[int(phase_code)]
-    _SINK(int(rank), phase, int(call_id), time.monotonic())
+    t = time.monotonic()
+    if _SINK is not None:
+        _SINK(int(rank), phase, int(call_id), t)
+    if _TEE is not None:
+        _TEE(int(rank), phase, int(call_id), t)
 
 
 def _host_event(rank: jnp.ndarray, phase_code: int, call_id: int) -> None:

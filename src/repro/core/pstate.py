@@ -59,6 +59,23 @@ class HwModel:
     def watts(self, f, act: Tuple[float, float] = (1.0, 1.0)):
         return self.watts_at_fmax * self.power(f, act)
 
+    def f_for_power(self, watts_per_rank, act: Tuple[float, float] = (1.0, 1.0)):
+        """Largest frequency whose power stays under ``watts_per_rank``.
+
+        The RAPL inverse of :meth:`watts`: a package cap is enforced by
+        clamping the frequency, so a cap below the static + uncore floor
+        maps to ``f_min`` (the PCU cannot shed leakage), and a cap above
+        full-load power maps to ``f_max``.  Vectorized like the forward
+        model.
+        """
+        rel = np.asarray(watts_per_rank, dtype=np.float64) / self.watts_at_fmax
+        core_act, mem_act = act
+        dyn = rel - self.p_base - self.p_uncore * mem_act
+        f = self.f_max * np.cbrt(
+            np.maximum(dyn, 0.0) / (self.p_coredyn * max(core_act, 1e-12))
+        )
+        return np.clip(f, self.f_min, self.f_max)
+
     # ---- timing ----------------------------------------------------------
     def slowdown(self, f, beta):
         """T(f)/T(fmax) for a phase with CPU-bound fraction ``beta``."""

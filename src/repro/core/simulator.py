@@ -68,6 +68,8 @@ class SimResult:
     exploited: float            # seconds spent at f_min inside comm phases
     exploited_slack: float      # ... restricted to slack
     calls: int
+    power_dt: float = 0.0                           # bin width (s), 0 = off
+    power_series: Optional[np.ndarray] = None       # (n_bins, n_ranks) watts
 
     def overhead_vs(self, base: "SimResult") -> float:
         return 100.0 * (self.time / base.time - 1.0)
@@ -125,15 +127,53 @@ def _two_rate_phase(hw: HwModel, work, beta, t_hi, f_hi, activity):
     return dur, energy, t_at_min
 
 
+def _bin_energy(series: np.ndarray, dt: float, t0, dur, e) -> None:
+    """Deposit per-rank phase energies uniformly over their time spans into
+    ``series`` (n_bins, n_ranks) watt bins.  Vectorized for the common case
+    (phase inside one bin); only bin-spanning ranks take the python path."""
+    n_bins = series.shape[0]
+    t0 = np.asarray(t0, np.float64)
+    dur = np.maximum(np.asarray(dur, np.float64), 0.0)
+    e = np.asarray(e, np.float64)
+    b0 = np.clip((t0 / dt).astype(np.int64), 0, n_bins - 1)
+    b1 = np.clip(((t0 + dur) / dt).astype(np.int64), 0, n_bins - 1)
+    same = b0 == b1
+    idx = np.arange(series.shape[1])
+    np.add.at(series, (b0[same], idx[same]), e[same] / dt)
+    for r in np.nonzero(~same)[0]:
+        bins = np.arange(b0[r], b1[r] + 1)
+        lo = np.maximum(bins * dt, t0[r])
+        hi = np.minimum((bins + 1) * dt, t0[r] + dur[r])
+        series[bins, r] += e[r] * np.clip(hi - lo, 0.0, None) / dur[r] / dt
+
+
 def simulate(
     wl: Workload,
     pol: Policy,
     hw: HwModel = DEFAULT_HW,
     collect_trace: bool = False,
+    power_dt: Optional[float] = None,
+    power_cap: Optional[float] = None,
 ) -> Tuple[SimResult, Optional[TraceRecord]]:
+    """Run ``wl`` under ``pol``.
+
+    ``power_dt`` turns on the per-interval power series: phase energies are
+    binned into ``power_dt``-second buckets per rank and returned on
+    ``SimResult.power_series`` (the cluster layer aggregates these into
+    node/rack watts — DESIGN.md §7).
+
+    ``power_cap`` is the external cap input in aggregate watts over this
+    workload's ranks: the RAPL semantics, enforced by clamping every
+    frequency the policy would choose to ``hw.f_for_power(cap / n_ranks)``
+    (inverted at compute activity, the worst case).
+    """
     n, t_tasks = wl.n_ranks, wl.n_tasks
     fmax, fmin, lat = hw.f_max, hw.f_min, hw.switch_latency
     grid = hw.pstates()
+    # `is not None`, not truthiness: a 0 W cap means "pin to f_min" (the
+    # inverse maps it there), the opposite of uncapped
+    f_cap = float(hw.f_for_power(power_cap / n, hw.act_comp)) if power_cap is not None else fmax
+    f_run = min(fmax, f_cap)                            # capped "full speed"
 
     t = np.zeros(n)
     ell = np.zeros(n)                                   # pinned-at-fmin residue
@@ -150,6 +190,9 @@ def simulate(
     trace_comp = np.zeros((t_tasks, n)) if collect_trace else None
     trace_slack = np.zeros((t_tasks, n)) if collect_trace else None
     trace_copy = np.zeros((t_tasks, n)) if collect_trace else None
+
+    # (start, duration, energy) per-rank segments for the power series
+    segs: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
 
     # effective timeout: timer expiry + expected PCU commit quantization
     theta_eff = pol.theta + 0.5 * lat
@@ -183,10 +226,13 @@ def simulate(
             idx = np.searchsorted(grid, np.nan_to_num(f_req, nan=fmax))
             idx = np.clip(idx, 0, len(grid) - 1)
             f_comp = np.where(have, grid[idx], fmax)
+        f_comp = np.minimum(f_comp, f_run)              # external cap clamp
 
         d_comp, e_comp, ell = _phase(hw, work, wl.beta_comp, f_comp, ell, hw.act_comp)
         energy += e_comp
         tcomp += float(d_comp.sum())
+        if power_dt:
+            segs.append((t.copy(), d_comp, e_comp))
         arrival = t + d_comp
 
         # ---- barrier resolution ----
@@ -216,8 +262,11 @@ def simulate(
             t_hi = slack
             f_slack_hi = f_comp
         t_lo = slack - t_hi
-        energy += hw.watts(f_slack_hi, hw.act_slack) * t_hi
-        energy += hw.watts(fmin, hw.act_slack) * t_lo
+        e_slack = hw.watts(f_slack_hi, hw.act_slack) * t_hi
+        e_slack = e_slack + hw.watts(fmin, hw.act_slack) * t_lo
+        energy += e_slack
+        if power_dt:
+            segs.append((arrival, slack, e_slack))
         exploited += float(t_lo.sum())
         exploited_slack += float(t_lo.sum())
         if pol.comm_mode == "pin_min":
@@ -240,7 +289,7 @@ def simulate(
                 # total in-call time, frequency drops; copy may start below it
                 t_to_fire = np.where(armed, np.maximum(theta_eff - slack, 0.0), np.inf)
                 d_copy, e_copy, t_min_in_copy = _two_rate_phase(
-                    hw, wc_r, wl.beta_copy, t_to_fire, fmax, hw.act_copy
+                    hw, wc_r, wl.beta_copy, t_to_fire, f_run, hw.act_copy
                 )
                 # restore at MPI exit pins the next phase start at f_min
                 ell = np.where(t_min_in_copy > 0, lat, ell)
@@ -249,12 +298,14 @@ def simulate(
                 # latency pins the start of the copy at f_min
                 ell = np.where(t_lo > 0, lat, ell)
                 d_copy, e_copy, ell = _phase(
-                    hw, wc_r, wl.beta_copy, np.full(n, fmax),
+                    hw, wc_r, wl.beta_copy, np.full(n, f_run),
                     ell, hw.act_copy,
                 )
                 t_min_in_copy = np.minimum(d_copy, np.where(t_lo > 0, lat, 0.0))
             energy += e_copy
             tcopy += float(d_copy.sum())
+            if power_dt:
+                segs.append((t_bar, d_copy, e_copy))
             exploited += float(np.sum(t_min_in_copy))
             t = t_bar + d_copy
         else:
@@ -275,6 +326,14 @@ def simulate(
             trace_slack[k] = slack
             trace_copy[k] = t - t_bar
 
+    power_series = None
+    if power_dt:
+        wall = float(t.max())
+        n_bins = max(int(np.ceil(wall / power_dt)), 1)
+        power_series = np.zeros((n_bins, n))
+        for t0_seg, dur_seg, e_seg in segs:
+            _bin_energy(power_series, power_dt, t0_seg, dur_seg, e_seg)
+
     res = SimResult(
         name=pol.name,
         time=float(t.max()),
@@ -285,6 +344,8 @@ def simulate(
         exploited=exploited,
         exploited_slack=exploited_slack,
         calls=t_tasks,
+        power_dt=power_dt or 0.0,
+        power_series=power_series,
     )
     trace = (
         TraceRecord(wl.site, wl.is_p2p, wl.nbytes, trace_comp, trace_slack, trace_copy)

@@ -92,7 +92,18 @@ def _run_continuous(args, cfg, params, mesh, n_dev: int, mp: int) -> None:
     eng.generate(warm, n_steps=2)
     t_compile = time.time() - t0
 
-    gov = Governor()
+    recorder = None
+    if args.trace_out:
+        from repro.cluster.trace import TraceRecorder
+
+        recorder = TraceRecorder(meta={"driver": "serve", "arch": args.arch,
+                                       "n_requests": args.n_requests})
+    gov = Governor(recorder=recorder)
+    tenant = None
+    if args.power_cap > 0:
+        from repro.cluster.job import ServeJob
+
+        tenant = ServeJob("serve", eng, gov, cap_w=args.power_cap, n_ranks=n_dev)
     slo = SLOTracker(tpot_target=args.tpot_target or None)
     reqs = _make_requests(args, cfg)
     t0 = time.time()
@@ -112,6 +123,16 @@ def _run_continuous(args, cfg, params, mesh, n_dev: int, mp: int) -> None:
     print(f"[serve] SLO: TTFT p95 {s['ttft']['p95'] * 1e3:.1f} ms, "
           f"TPOT p95 {s['tpot']['p95'] * 1e3:.1f} ms over "
           f"{s['completed']} completed")
+    if tenant is not None:
+        er = tenant.run_epoch(args.power_cap)
+        print(f"[power] cap={er.cap_w:.1f}W draw={er.power_w:.1f}W "
+              f"exploited={100 * er.exploited_ratio:.1f}% "
+              f"fill={tenant.fill_fraction:.2f}")
+    if recorder is not None:
+        recorder.meta["report"] = rep.to_dict()
+        path = recorder.save(args.trace_out)
+        print(f"[trace] {recorder.n_seen} records ({recorder.n_dropped} dropped) "
+              f"-> {path}")
 
 
 def main() -> None:
@@ -133,6 +154,12 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--tpot-target", type=float, default=0.0,
                     help="TPOT SLO target (s); 0 disables throttling")
+    ap.add_argument("--trace-out", default="",
+                    help="record the governor's event stream to this JSONL file "
+                         "(continuous mode; replayable via repro.cluster.trace)")
+    ap.add_argument("--power-cap", type=float, default=0.0,
+                    help="job power cap in watts: attach a cluster.ServeJob tenant "
+                         "+ RAPL-style cap actuator and report draw vs cap")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -57,6 +57,13 @@ def main() -> None:
     ap.add_argument("--fail-at", type=int, default=0,
                     help="simulate a node failure at this step (fault-tolerance demo)")
     ap.add_argument("--instrument", choices=["off", "barrier", "profile"], default="off")
+    ap.add_argument("--trace-out", default="",
+                    help="record the governor's event stream to this JSONL file "
+                         "(replayable via repro.cluster.trace; implies --instrument profile)")
+    ap.add_argument("--power-cap", type=float, default=0.0,
+                    help="job power cap in watts: attach a cluster.GovernorJob tenant "
+                         "+ RAPL-style cap actuator and report per-interval power "
+                         "(implies --instrument profile)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -67,7 +74,25 @@ def main() -> None:
     opt_cfg = OptConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
                         total_steps=args.steps)
 
-    governor = Governor()
+    recorder = None
+    if args.trace_out:
+        from repro.cluster.trace import TraceRecorder
+
+        recorder = TraceRecorder(meta={"driver": "train", "arch": args.arch,
+                                       "steps": args.steps})
+    if (args.trace_out or args.power_cap > 0) and args.instrument != "profile":
+        # the recorder records events, the tenant polls interval snapshots:
+        # both are empty without the profile-mode event stream
+        print(f"[train] --trace-out/--power-cap need phase events: "
+              f"instrument {args.instrument!r} -> 'profile'")
+        args.instrument = "profile"
+    governor = Governor(recorder=recorder)
+    tenant = None
+    if args.power_cap > 0:
+        from repro.cluster.job import GovernorJob
+
+        tenant = GovernorJob("train", governor, n_ranks=len(jax.devices()),
+                             cap_w=args.power_cap)
     if args.instrument != "off":
         instrument.set_mode(args.instrument)
         if args.instrument == "profile":
@@ -118,6 +143,11 @@ def main() -> None:
                         f"({(time.time() - t_start) / max(step - start_step, 1):.2f}s/step)",
                         flush=True,
                     )
+                    if tenant is not None:
+                        er = tenant.run_epoch(args.power_cap)
+                        print(f"[power] cap={er.cap_w:.1f}W draw={er.power_w:.1f}W "
+                              f"exploited={100 * er.exploited_ratio:.1f}% "
+                              f"({er.n_calls} phases)", flush=True)
         if failed_device is not None:
             print(f"[train] step {step}: device {failed_device} FAILED; re-meshing")
             jax.block_until_ready(state)            # drain in-flight work
@@ -149,6 +179,15 @@ def main() -> None:
               f"slack={rep.total_slack:.4f}s exploited={rep.exploited_slack:.4f}s "
               f"energy_saving={rep.energy_saving_pct:.2f}% "
               f"stragglers={rep.stragglers}")
+    if tenant is not None:
+        print(f"[power] job total: {tenant.total_energy_j:.1f}J over "
+              f"{tenant.total_wall_s:.1f}s, cap commits "
+              f"{len(tenant.actuator.commits)} (suppressed {tenant.actuator.n_suppressed})")
+    if recorder is not None:
+        if args.instrument == "profile":
+            recorder.meta["report"] = rep.to_dict()
+        path = recorder.save(args.trace_out)
+        print(f"[trace] {recorder.n_seen} records ({recorder.n_dropped} dropped) -> {path}")
     instrument.set_mode("off")
     instrument.set_event_sink(None)
 

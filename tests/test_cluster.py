@@ -1,0 +1,373 @@
+"""Tier-1 tests for the ``repro.cluster`` power-budget layer.
+
+The two contracts the subsystem rests on are asserted here:
+
+* **record/replay is lossless** — a recorded run, replayed through a
+  fresh Governor, reproduces the live slack/copy/energy totals
+  *bit-for-bit* (not approximately);
+* **the arbiter is safe** — property-tested: allocations never sum above
+  the cluster cap and never drop an active job below its floor.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.arbiter import JobSample, PowerBudgetArbiter, StaticEqualSplit
+from repro.cluster.coschedule import make_job, run_coschedule
+from repro.cluster.job import GovernorJob, SimJob
+from repro.cluster.power import PowerCapActuator, aggregate_power, node_power_series
+from repro.cluster.trace import TRACE_VERSION, TraceRecorder, load, replay, to_workload, what_if
+from repro.core.governor import Governor, GovernorReport
+from repro.core.policies import BASELINE, COUNTDOWN, COUNTDOWN_SLACK
+from repro.core.pstate import DEFAULT_HW
+from repro.core.simulator import simulate
+from repro.core.workloads import APPS, generate
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def _synthetic_run(recorder=None, n_calls=25, n_ranks=4, seed=0, ingest=True):
+    """A governor fed a deterministic barrier stream (+ one ingested phase)."""
+    gov = Governor(recorder=recorder)
+    rng = np.random.default_rng(seed)
+    t = 1.0
+    for call in range(n_calls):
+        arrivals = t + rng.uniform(0.0, 3e-3, n_ranks)
+        release = float(arrivals.max())
+        copies = rng.uniform(0.2e-3, 2e-3, n_ranks)      # per-rank copy times
+        for r in range(n_ranks):
+            gov.sink(r, "barrier_enter", call, float(arrivals[r]))
+        for r in range(n_ranks):
+            gov.sink(r, "barrier_exit", call, release)
+            gov.sink(r, "copy_exit", call, release + float(copies[r]))
+        t = release + 4e-3
+    if ingest:
+        gov.ingest_phase(0, 1 << 20, t, t + 2e-3, t + 2.5e-3)
+    return gov
+
+
+# --------------------------------------------------------------------------
+# trace: record -> save -> load -> replay, bit-for-bit
+# --------------------------------------------------------------------------
+
+def test_trace_roundtrip_is_bitwise_exact():
+    rec = TraceRecorder(meta={"run": "test"})
+    gov = _synthetic_run(recorder=rec)
+    live = gov.finalize()
+
+    with tempfile.TemporaryDirectory() as d:
+        path = rec.save(os.path.join(d, "run.jsonl"))
+        header, records = load(path)
+    assert header["version"] == TRACE_VERSION
+    assert header["meta"] == {"run": "test"}
+    assert header["n_records"] == len(records) == rec.n_seen
+
+    replayed_gov, rep = replay(records)
+    # == on floats, deliberately: replay must reproduce the exact bits
+    assert rep.total_slack == live.total_slack
+    assert rep.total_copy == live.total_copy
+    assert rep.exploited_slack == live.exploited_slack
+    assert rep.energy_baseline == live.energy_baseline
+    assert rep.energy_policy == live.energy_policy
+    assert rep.n_calls == live.n_calls
+    assert rep.n_downshifts == live.n_downshifts
+    # the replayed governor re-derives the same actuation stream
+    assert replayed_gov.actuation_log == gov.actuation_log
+
+
+def test_trace_replay_under_other_policy_differs():
+    rec = TraceRecorder()
+    gov = _synthetic_run(recorder=rec)
+    live = gov.finalize()
+    _, rep = replay(rec.records(), policy=COUNTDOWN)     # comm scope, not slack
+    assert rep.total_slack == live.total_slack           # same measured phases
+    assert rep.energy_policy != live.energy_policy       # different pricing
+
+
+def test_trace_ring_buffer_bounds_memory_and_load_refuses_truncation(tmp_path):
+    rec = TraceRecorder(capacity=10)
+    _synthetic_run(recorder=rec, n_calls=20)
+    assert len(rec.records()) == 10
+    assert rec.n_dropped == rec.n_seen - 10 > 0
+    path = rec.save(str(tmp_path / "truncated.jsonl"))
+    with pytest.raises(ValueError, match="dropped"):
+        load(path)                                       # cannot replay exactly
+    header, records = load(path, allow_truncated=True)
+    assert header["n_dropped"] == rec.n_dropped and len(records) == 10
+
+
+def test_trace_load_rejects_unknown_version(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"k": "hdr", "version": 999, "meta": {}}\n')
+    with pytest.raises(ValueError, match="version"):
+        load(str(p))
+    p2 = tmp_path / "headerless.jsonl"
+    p2.write_text('{"k": "ev", "rank": 0, "phase": "barrier_enter", "call": 1, "t": 0.0}\n')
+    with pytest.raises(ValueError, match="header"):
+        load(str(p2))
+
+
+def test_to_workload_reproduces_recorded_slack():
+    rec = TraceRecorder()
+    gov = _synthetic_run(recorder=rec, ingest=False)
+    live = gov.finalize()
+    wl = to_workload(rec.records())
+    assert wl.n_ranks == 4 and wl.n_tasks == 25
+    res, _ = simulate(wl, BASELINE)
+    # baseline re-simulation of the lifted workload re-creates the same
+    # emergent slack and copy time the live run measured
+    assert res.tslack == pytest.approx(live.total_slack, rel=1e-9)
+    assert res.tcopy == pytest.approx(live.total_copy, rel=1e-9)
+
+
+def test_what_if_applies_policy_and_cap():
+    rec = TraceRecorder()
+    _synthetic_run(recorder=rec, ingest=False)
+    free = what_if(rec.records(), COUNTDOWN_SLACK)
+    n_ranks = 4
+    capped = what_if(rec.records(), COUNTDOWN_SLACK,
+                     power_cap=0.6 * n_ranks * DEFAULT_HW.watts_at_fmax)
+    assert capped.energy < free.energy                   # cap sheds watts
+    assert capped.time >= free.time                      # ... not for free
+
+
+# --------------------------------------------------------------------------
+# governor: interval snapshots, structured actuations, report dict
+# --------------------------------------------------------------------------
+
+def test_interval_snapshots_partition_the_run():
+    gov = Governor()
+    gov.ingest_phase(0, 1, 0.0, 10e-3, 12e-3)
+    s1 = gov.interval_snapshot()
+    gov.ingest_phase(0, 2, 1.0, 1.004, 1.005)
+    gov.ingest_phase(1, 3, 2.0, 2.0002, 2.0002)          # under theta: no downshift
+    s2 = gov.interval_snapshot()
+    s3 = gov.interval_snapshot()                          # nothing new
+    assert (s1.n_calls, s2.n_calls, s3.n_calls) == (1, 2, 0)
+    assert s3.exploited_ratio == 0.0
+    rep = gov.finalize()
+    assert s1.slack + s2.slack == pytest.approx(rep.total_slack, rel=1e-12)
+    assert s1.energy_policy + s2.energy_policy == pytest.approx(rep.energy_policy, rel=1e-12)
+    assert s1.n_downshifts + s2.n_downshifts == rep.n_downshifts
+    assert 0.0 < s1.exploited_ratio <= 1.0
+
+
+def test_actuation_records_are_structured():
+    gov = Governor()
+    gov.ingest_phase(3, 7, 0.0, 5e-3, 6e-3)
+    down, up = gov.actuation_log
+    assert down.action == "set_pstate_min" and up.action == "restore_pstate_max"
+    assert down.rank == 3 and down.call_id == 7
+    assert down.slack == pytest.approx(5e-3)
+    assert down[2] == "set_pstate_min"                   # legacy index layout
+
+
+def test_report_to_dict_and_negative_energy_guard():
+    gov = _synthetic_run()
+    d = gov.finalize().to_dict()
+    assert d["n_calls"] == 26 and "energy_saving_pct" in d
+    assert isinstance(d["stragglers"], list)
+    rep = GovernorReport(
+        n_calls=1, n_downshifts=1, total_slack=1.0, total_copy=0.0,
+        exploited_slack=1.0, energy_baseline=1.0, energy_policy=-1e-9,
+        straggler_summary={}, stragglers=[],
+    )
+    assert rep.energy_saving_pct == 100.0                # clamped, not 100.0000001
+
+
+# --------------------------------------------------------------------------
+# power: aggregation, cap actuator, simulator power series/cap
+# --------------------------------------------------------------------------
+
+def test_aggregate_power_rolls_up_ragged_groups():
+    series = np.arange(12.0).reshape(2, 6)
+    nodes = aggregate_power(series, 4)                   # 6 ranks -> 2 nodes
+    assert nodes.shape == (2, 2)
+    np.testing.assert_allclose(nodes.sum(axis=1), series.sum(axis=1))
+    with pytest.raises(ValueError):
+        aggregate_power(series, 0)
+
+
+def test_simulator_power_series_conserves_energy():
+    wl = generate(APPS["nas_is.D.128"], seed=3)
+    res, _ = simulate(wl, COUNTDOWN_SLACK, power_dt=0.1)
+    assert res.power_series.shape[1] == wl.n_ranks
+    assert res.power_series.shape[0] == int(np.ceil(res.time / 0.1))
+    assert res.power_series.sum() * 0.1 == pytest.approx(res.energy, rel=1e-9)
+    nodes = node_power_series(res, ranks_per_node=8)
+    assert nodes.shape == (res.power_series.shape[0], 4)
+    bare, _ = simulate(wl, COUNTDOWN_SLACK)
+    with pytest.raises(ValueError, match="power series"):
+        node_power_series(bare, 8)
+
+
+def test_simulator_external_cap_sheds_power():
+    wl = generate(APPS["nas_ft.E.1024"], seed=1)         # comm-bound: cheap to cap
+    free, _ = simulate(wl, BASELINE)
+    cap_w = 0.6 * wl.n_ranks * DEFAULT_HW.watts_at_fmax
+    capped, _ = simulate(wl, BASELINE, power_cap=cap_w, power_dt=0.2)
+    assert capped.energy < free.energy
+    # enforced: binned aggregate watts never exceed the cap
+    assert capped.power_series.sum(axis=1).max() <= cap_w * (1 + 1e-9)
+    # a 0 W cap pins to f_min — it must not mean "uncapped" (falsy trap)
+    zero, _ = simulate(wl, BASELINE, power_cap=0.0)
+    pinned, _ = simulate(wl, BASELINE, power_cap=1e-9)
+    assert zero.energy == pytest.approx(pinned.energy, rel=1e-12)
+    assert zero.energy < free.energy
+
+
+def test_f_for_power_inverts_watts():
+    hw = DEFAULT_HW
+    assert hw.f_for_power(hw.watts_at_fmax * 2, hw.act_comp) == hw.f_max
+    assert hw.f_for_power(0.0, hw.act_comp) == hw.f_min
+    for w in (6.0, 7.5, 9.0):
+        f = float(hw.f_for_power(w, hw.act_comp))
+        assert float(hw.watts(f, hw.act_comp)) <= w + 1e-9
+
+
+def test_cap_actuator_latency_and_hysteresis():
+    act = PowerCapActuator(cap_w=100.0, latency=500e-6, theta=500e-6,
+                           deadband_w=1.0, floor_w=10.0)
+    assert act.request(0.0, 80.0)
+    assert act.cap_at(0.0) == 100.0                      # not yet committed
+    assert act.cap_at(0.0 + 500e-6) == 80.0              # enforced after latency
+    # inside theta_eff of the accepted request: rate-limited
+    assert not act.request(100e-6, 50.0)
+    # past theta_eff but within the watt deadband: suppressed
+    assert not act.request(1.0, 80.5)
+    assert act.n_suppressed == 2
+    # floor clamp
+    assert act.request(2.0, 0.0)
+    assert act.cap_at(3.0) == 10.0
+    assert len(act.commits) == 2
+
+
+# --------------------------------------------------------------------------
+# arbiter: property-tested invariants + directional behavior
+# --------------------------------------------------------------------------
+
+samples_strategy = st.tuples(
+    st.integers(min_value=1, max_value=6),               # n_jobs
+    st.integers(min_value=0, max_value=10_000),          # seed
+    st.floats(min_value=50.0, max_value=500.0),          # cap
+    st.floats(min_value=0.0, max_value=1.0),             # floor fraction of fair share
+)
+
+
+@given(samples_strategy)
+@settings(max_examples=60, deadline=None)
+def test_arbiter_never_exceeds_cap_nor_starves_floor(args):
+    n_jobs, seed, cap, floor_frac = args
+    rng = np.random.default_rng(seed)
+    floor = floor_frac * cap / n_jobs
+    arb = PowerBudgetArbiter(cap_w=cap, floor_w=floor,
+                             alpha_w=float(rng.uniform(5.0, 100.0)),
+                             beta=float(rng.uniform(0.1, 0.9)))
+    ids = [f"job{i}" for i in range(n_jobs)]
+    for _ in range(12):
+        samples = [
+            JobSample(j, power_w=float(rng.uniform(0, cap)),
+                      exploited_ratio=float(rng.uniform(0, 1)),
+                      done=bool(rng.random() < 0.1))
+            for j in ids
+        ]
+        alloc = arb.step(samples)
+        active = [s.job_id for s in samples if not s.done]
+        assert set(alloc) == set(active)
+        assert sum(alloc.values()) <= cap + 1e-6
+        for j in active:
+            assert alloc[j] >= floor - 1e-9
+
+
+def test_arbiter_shifts_watts_to_critical_path():
+    arb = PowerBudgetArbiter(cap_w=100.0, floor_w=10.0)
+    for _ in range(8):
+        alloc = arb.step([
+            JobSample("critical", power_w=50.0, exploited_ratio=0.01),
+            JobSample("slackful", power_w=50.0, exploited_ratio=0.60),
+        ])
+    assert alloc["critical"] > 70.0
+    assert alloc["slackful"] == pytest.approx(10.0, abs=1.0)
+
+
+def test_arbiter_frees_watts_on_departure():
+    arb = PowerBudgetArbiter(cap_w=100.0, floor_w=10.0, alpha_w=50.0)
+    arb.step([JobSample("a", 40.0, 0.0), JobSample("b", 40.0, 0.0)])
+    alloc = arb.step([JobSample("a", 40.0, 0.0), JobSample("b", 40.0, 0.0, done=True)])
+    assert set(alloc) == {"a"}
+    alloc = arb.step([JobSample("a", 40.0, 0.0)])
+    assert alloc["a"] > 80.0                             # climbed into freed watts
+
+
+def test_arbiter_rejects_infeasible_floor():
+    arb = PowerBudgetArbiter(cap_w=50.0, floor_w=30.0)
+    with pytest.raises(ValueError, match="floor"):
+        arb.step([JobSample("a", 1.0, 0.0), JobSample("b", 1.0, 0.0)])
+
+
+# --------------------------------------------------------------------------
+# jobs + co-scheduling
+# --------------------------------------------------------------------------
+
+def test_sim_job_consumes_workload_under_cap():
+    job = make_job("comm_bound", seed=5, n_tasks=120, tasks_per_epoch=40)
+    cap = 60.0
+    reports = [job.run_epoch(cap) for _ in range(3)]
+    assert job.done and job._cursor == 120
+    for r in reports:
+        assert r.cap_w == cap
+        assert r.power_w <= cap * 1.02                   # enforced (act margin)
+        assert 0.0 <= r.exploited_ratio <= 1.0
+    assert job.total_wall_s == pytest.approx(sum(r.wall_s for r in reports))
+    assert job.total_energy_j == pytest.approx(sum(r.energy_j for r in reports))
+
+
+def test_governor_job_polls_live_interval():
+    gov = Governor()
+    job = GovernorJob("live", gov, n_ranks=4, cap_w=40.0)
+    gov.ingest_phase(0, 1, 0.0, 5e-3, 6e-3)
+    rep = job.run_epoch(35.0)
+    assert rep.n_calls == 1
+    assert 0.0 <= rep.exploited_ratio <= 1.0
+    assert rep.power_w > 0.0
+    assert job.last_sample().job_id == "live"
+    assert len(job.actuator.commits) == 1                # cap request landed
+
+
+def test_coschedule_arbiter_beats_static_split():
+    """The acceptance mix: heterogeneous two-job workload under a tight
+    cap — the slack-driven arbiter must save energy without violating the
+    paper's performance-neutrality bar (<= 1% makespan overhead)."""
+    cap, floor = 100.0, 15.0
+
+    def mix():
+        return [make_job("compute_bound", seed=1, floor_w=floor),
+                make_job("bursty_serve", seed=2, floor_w=floor)]
+
+    static = run_coschedule(mix(), cap, arbiter=StaticEqualSplit(cap_w=cap, floor_w=floor))
+    arbited = run_coschedule(mix(), cap, arbiter=PowerBudgetArbiter(cap_w=cap, floor_w=floor))
+    assert arbited.energy_j < static.energy_j
+    assert arbited.makespan_s <= static.makespan_s * 1.01
+    for alloc in arbited.allocations:
+        assert sum(alloc.values()) <= cap + 1e-6
+        for w in alloc.values():
+            assert w >= floor - 1e-9
+
+
+def test_instrument_tee_feeds_recorder():
+    from repro.core import instrument
+
+    rec = TraceRecorder()
+    instrument.set_event_tee(rec.on_event)
+    try:
+        instrument._emit(0, 0, 42)
+        instrument._emit(0, 1, 42)
+    finally:
+        instrument.set_event_tee(None)
+    kinds = [(r["k"], r["phase"], r["call"]) for r in rec.records()]
+    assert kinds == [("ev", "barrier_enter", 42), ("ev", "barrier_exit", 42)]
