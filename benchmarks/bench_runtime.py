@@ -1,18 +1,72 @@
 """Micro-benchmarks of the framework's own moving parts: simulator
-throughput, governor event ingestion, kernel interpret-mode sanity, and the
+throughput, governor event ingestion, kernel interpret-mode sanity, the
 instrumentation overhead of the artificial barrier (paper §4.2 claim:
-negligible)."""
+negligible), and the theta sweep — adaptive theta (cntd_adaptive) vs the
+paper's fixed 500 us across the three co-scheduling workload families
+(compute-bound / comm-bound / bursty)."""
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
 
-from benchmarks.common import baseline_trace, emit, time_call
+from benchmarks.common import baseline_trace, emit, save_json, time_call
 from repro.core.governor import Governor
-from repro.core.policies import ALL_POLICIES, BASELINE, COUNTDOWN_SLACK
+from repro.core.policies import ALL_POLICIES, BASELINE, CNTD_ADAPTIVE, COUNTDOWN_SLACK
 from repro.core.simulator import simulate
 from repro.core.workloads import APPS, generate
+
+THETA_GRID = (250e-6, 500e-6, 1e-3, 2e-3)
+FAMILIES = ("compute_bound", "comm_bound", "bursty_serve")
+
+
+def theta_sweep(seed: int = 0, n_tasks: int = 400) -> dict:
+    """Adaptive vs fixed theta on the three tenant families (DESIGN.md §8).
+
+    For each family: baseline, fixed-theta cntd_slack across ``THETA_GRID``,
+    and ``cntd_adaptive`` (online ThetaTuner).  Reports energy saving and
+    time-to-completion overhead vs baseline, plus the two acceptance
+    aggregates: adaptive beats (or matches) fixed-500us on >= 1 family, and
+    adaptive overhead stays under 1% on every family.
+    """
+    from repro.cluster.coschedule import MIX_SPECS
+
+    out: dict = {"families": {}}
+    beats = False
+    max_ovh = 0.0
+    for fam in FAMILIES:
+        spec = dataclasses.replace(MIX_SPECS[fam], n_tasks=n_tasks)
+        wl = generate(spec, seed=seed)
+        base, _ = simulate(wl, BASELINE)
+        row: dict = {}
+        for th in THETA_GRID:
+            pol = dataclasses.replace(COUNTDOWN_SLACK, theta=th)
+            res, _ = simulate(wl, pol)
+            row[f"fixed_{th * 1e6:.0f}us"] = {
+                "energy_saving_pct": res.energy_saving_vs(base),
+                "overhead_pct": res.overhead_vs(base),
+            }
+        us, ad = time_call(lambda: simulate(wl, CNTD_ADAPTIVE)[0], repeats=1)
+        row["adaptive"] = {
+            "energy_saving_pct": ad.energy_saving_vs(base),
+            "overhead_pct": ad.overhead_vs(base),
+            "theta_eff_final_us": float(np.nanmean(ad.theta_series[-20:]) * 1e6),
+        }
+        out["families"][fam] = row
+        fixed500 = row["fixed_500us"]["energy_saving_pct"]
+        adaptive = row["adaptive"]["energy_saving_pct"]
+        beats = beats or adaptive >= fixed500
+        max_ovh = max(max_ovh, row["adaptive"]["overhead_pct"])
+        emit(
+            f"bench/theta_sweep/{fam}", us,
+            f"esave_fixed500={fixed500:.2f};esave_adaptive={adaptive:.2f};"
+            f"ovh_adaptive={row['adaptive']['overhead_pct']:.3f}",
+        )
+    out["adaptive_beats_fixed500"] = bool(beats)
+    out["max_overhead_pct"] = float(max_ovh)
+    save_json("theta_sweep", out)
+    return out
 
 
 def run(full: bool = False) -> dict:
@@ -44,6 +98,9 @@ def run(full: bool = False) -> dict:
     res, _ = simulate(wl, ALL_POLICIES["cntd_slack"])
     out["barrier_overhead_pct"] = res.overhead_vs(base)
     emit("bench/barrier_overhead", 0.0, out["barrier_overhead_pct"])
+
+    # theta sweep: adaptive vs fixed across the workload families
+    out["theta_sweep"] = theta_sweep()
 
     if full:
         import jax.numpy as jnp

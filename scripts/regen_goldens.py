@@ -1,0 +1,48 @@
+#!/usr/bin/env python
+"""Regenerate the golden-report fixtures for tests/test_golden.py.
+
+Run after an *intentional* change to the governor's accounting math::
+
+    python scripts/regen_goldens.py
+
+then review the diff of ``tests/goldens/*.json`` — every changed number is
+a behavior change the commit message must justify.  The conformance suite
+compares against these files with a pinned tolerance, so an accidental
+refactor that shifts energy/overhead numbers fails loudly instead of
+drifting silently.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, os.path.join(REPO, "tests"))
+
+from golden_common import CANNED, GOLDEN_POLICY_NAMES, report_dict  # noqa: E402
+from repro.core.policies import ALL_POLICIES  # noqa: E402
+
+GOLDEN_DIR = os.path.join(REPO, "tests", "goldens")
+
+
+def main() -> None:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for kind in CANNED:
+        payload = {
+            "workload": kind,
+            "policies": {
+                name: report_dict(ALL_POLICIES[name], kind)
+                for name in GOLDEN_POLICY_NAMES
+            },
+        }
+        path = os.path.join(GOLDEN_DIR, f"{kind}.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path} ({len(payload['policies'])} policies)")
+
+
+if __name__ == "__main__":
+    main()

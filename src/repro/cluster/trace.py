@@ -15,10 +15,19 @@ what-if loop the cap arbiter is tuned against.
 
 Record kinds (one JSON object per line; line 1 is the header):
 
-  {"k": "hdr", "version": 1, "meta": {...}}
+  {"k": "hdr", "version": 2, "meta": {...}}
   {"k": "ev",    "rank": R, "phase": P, "call": C, "t": T}
-  {"k": "phase", "rank": R, "call": C, "t0": .., "t1": .., "t2": ..}
+  {"k": "phase", "rank": R, "call": C, "t0": .., "t1": .., "t2": .., "site": S?}
   {"k": "act",   "t": T, "rank": R, "action": A, "call": C, "slack": S}
+  {"k": "theta", "t": T, "site": S, "rank": R, "before": .., "after": ..,
+                 "reason": "decay"|"raise", "obs": ..}
+
+Version history: v1 was the 3-phase taxonomy without tuner records; v2 adds
+the 5-phase events (``dispatch_enter``/``wait_enter``), the optional
+``site`` on ingested phases, and ``theta`` tuner-decision records.  v1
+traces still load (they are a strict subset of v2).  ``theta`` and ``act``
+records are *outputs* of the live governor: replay re-derives both, and the
+differential test asserts the re-derived stream matches the recorded one.
 
 Floats round-trip through ``repr`` so replay sees the identical bits.
 """
@@ -34,8 +43,10 @@ from repro.core.governor import Actuation, Governor, GovernorReport
 from repro.core.policies import COUNTDOWN_SLACK, Policy
 from repro.core.pstate import DEFAULT_HW, HwModel
 from repro.core.simulator import SimResult, Workload, simulate
+from repro.core.timeout import ThetaDecision, ThetaTuner
 
-TRACE_VERSION = 1
+TRACE_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 
 
 class TraceRecorder:
@@ -57,14 +68,24 @@ class TraceRecorder:
         self._append({"k": "ev", "rank": int(rank), "phase": phase,
                       "call": int(call_id), "t": float(t)})
 
-    def on_phase(self, rank: int, call_id: int, t0: float, t1: float, t2: float) -> None:
-        self._append({"k": "phase", "rank": int(rank), "call": int(call_id),
-                      "t0": float(t0), "t1": float(t1), "t2": float(t2)})
+    def on_phase(self, rank: int, call_id: int, t0: float, t1: float, t2: float,
+                 site: Optional[int] = None) -> None:
+        rec = {"k": "phase", "rank": int(rank), "call": int(call_id),
+               "t0": float(t0), "t1": float(t1), "t2": float(t2)}
+        if site is not None:
+            rec["site"] = int(site)
+        self._append(rec)
 
     def on_actuation(self, act: Actuation) -> None:
         self._append({"k": "act", "t": float(act.t), "rank": int(act.rank),
                       "action": act.action, "call": int(act.call_id),
                       "slack": float(act.slack)})
+
+    def on_theta(self, dec: ThetaDecision) -> None:
+        self._append({"k": "theta", "t": float(dec.t), "site": int(dec.site),
+                      "rank": int(dec.rank), "before": float(dec.theta_before),
+                      "after": float(dec.theta_after), "reason": dec.reason,
+                      "obs": float(dec.slack)})
 
     def _append(self, rec: Dict) -> None:
         self.n_seen += 1
@@ -103,9 +124,10 @@ def load(path: str, allow_truncated: bool = False) -> Tuple[Dict, List[Dict]]:
     header = json.loads(lines[0])
     if header.get("k") != "hdr":
         raise ValueError(f"{path}: first record is {header.get('k')!r}, not a header")
-    if header.get("version") != TRACE_VERSION:
+    if header.get("version") not in SUPPORTED_VERSIONS:
         raise ValueError(
-            f"{path}: trace version {header.get('version')!r} != {TRACE_VERSION}"
+            f"{path}: trace version {header.get('version')!r} not in "
+            f"{SUPPORTED_VERSIONS}"
         )
     if header.get("n_dropped", 0) > 0 and not allow_truncated:
         raise ValueError(
@@ -121,20 +143,30 @@ def replay(
     policy: Policy = COUNTDOWN_SLACK,
     hw: HwModel = DEFAULT_HW,
     governor: Optional[Governor] = None,
+    tuner: Optional[ThetaTuner] = None,
 ) -> Tuple[Governor, GovernorReport]:
     """Feed a recorded stream through a (fresh) governor, in capture order.
 
     With the same policy/hw as the live run this reproduces its report
     exactly; with a different policy/theta it is the cheapest what-if.
-    ``act`` records are outputs of the live governor and are skipped —
-    the replayed governor re-derives its own.
+    ``act`` and ``theta`` records are outputs of the live governor and are
+    skipped — the replayed governor re-derives its own (a fresh tuner is a
+    pure function of the observation order, so an adaptive run replayed
+    under the same adaptive policy reproduces the recorded decisions
+    bit-for-bit; pass ``tuner`` to replay under different tuner settings —
+    mutually exclusive with ``governor``, which carries its own).
     """
-    gov = governor if governor is not None else Governor(policy=policy, hw=hw)
+    if governor is not None and tuner is not None:
+        raise ValueError("pass either governor= or tuner=, not both — a "
+                         "provided governor already carries its tuner")
+    gov = governor if governor is not None else Governor(policy=policy, hw=hw,
+                                                         tuner=tuner)
     for r in records:
         if r["k"] == "ev":
             gov.sink(r["rank"], r["phase"], r["call"], r["t"])
         elif r["k"] == "phase":
-            gov.ingest_phase(r["rank"], r["call"], r["t0"], r["t1"], r["t2"])
+            gov.ingest_phase(r["rank"], r["call"], r["t0"], r["t1"], r["t2"],
+                             site=r.get("site"))
     return gov, gov.finalize()
 
 
@@ -151,24 +183,39 @@ def to_workload(records: List[Dict], name: str = "replayed",
     Collective slack therefore survives the lift exactly; single-rank
     ingested phases (serve underfill/idle) have no arrival imbalance to
     re-emerge from and contribute compute+copy only.
+
+    Async (5-phase) occurrences lift their ``dispatch_enter -> wait_enter``
+    window into ``Workload.overlap``: the rank "arrives" at dispatch, and
+    the overlapped seconds are marked so the simulator accounts them as
+    busy compute rather than exploitable slack.
     """
-    # normalize both record kinds into per-occurrence {rank: [t0, t1, t2]}
+    # normalize both record kinds into per-occurrence
+    # {rank: [t0, t1, t2, overlap]} (t0 = slack-window anchor, i.e. the
+    # dispatch for async pairs; overlap = dispatch->wait seconds).  The
+    # grouping key for the lifted Workload.site honors a recorded ``site``
+    # override (serve meters mint a fresh call id per phase but tag a
+    # stable site — without the override every phase would become its own
+    # one-observation site and an adaptive what_if could never adapt)
     open_calls: Dict[int, Dict[int, List[float]]] = {}
-    order: List[Tuple[int, Dict[int, List[float]]]] = []
+    order: List[Tuple[Tuple[str, int], Dict[int, List[float]]]] = []
     for r in records:
         if r["k"] == "phase":
-            order.append((r["call"], {r["rank"]: [r["t0"], r["t1"], r["t2"]]}))
+            key = ("site", r["site"]) if "site" in r else ("call", r["call"])
+            order.append((key, {r["rank"]: [r["t0"], r["t1"], r["t2"], 0.0]}))
         elif r["k"] == "ev":
             rank, call = r["rank"], r["call"]
             occ = open_calls.get(call)
-            if r["phase"] == "barrier_enter":
+            if r["phase"] in ("barrier_enter", "dispatch_enter"):
                 if occ is None or rank in occ:
                     occ = {}
                     open_calls[call] = occ
-                    order.append((call, occ))
-                occ[rank] = [r["t"], r["t"], r["t"]]
+                    order.append((("call", call), occ))
+                occ[rank] = [r["t"], r["t"], r["t"], 0.0]
             elif occ is not None and rank in occ:
-                if r["phase"] == "barrier_exit":
+                if r["phase"] == "wait_enter":
+                    occ[rank][3] = max(r["t"] - occ[rank][0], 0.0)
+                    occ[rank][1] = occ[rank][2] = r["t"]
+                elif r["phase"] == "barrier_exit":
                     occ[rank][1] = occ[rank][2] = r["t"]
                 elif r["phase"] == "copy_exit":
                     occ[rank][2] = r["t"]
@@ -181,18 +228,20 @@ def to_workload(records: List[Dict], name: str = "replayed",
     comp = np.zeros((t_tasks, n))
     copy = np.zeros(t_tasks)
     copy_rank = np.zeros((t_tasks, n))
+    overlap = np.zeros(t_tasks)
     site = np.zeros(t_tasks, np.int64)
     site_of: Dict[int, int] = {}
     prev_end = {rk: None for rk in ranks}
-    for k, (call, occ) in enumerate(order):
-        site[k] = site_of.setdefault(call, len(site_of))
-        t_base = min(t0 for t0, _, _ in occ.values())
-        for rk, (t0, t1, t2) in occ.items():
+    for k, (key, occ) in enumerate(order):
+        site[k] = site_of.setdefault(key, len(site_of))
+        t_base = min(t0 for t0, _, _, _ in occ.values())
+        for rk, (t0, t1, t2, ov) in occ.items():
             start = prev_end[rk] if prev_end[rk] is not None else t_base
             comp[k, rank_pos[rk]] = max(t0 - start, 0.0)
             prev_end[rk] = t2
             copy_rank[k, rank_pos[rk]] = max(t2 - t1, 0.0)
         copy[k] = float(np.mean([copy_rank[k, rank_pos[rk]] for rk in occ])) if occ else 0.0
+        overlap[k] = float(np.mean([occ[rk][3] for rk in occ])) if occ else 0.0
     # per-rank copy durations survive through the jitter channel, so the
     # simulated phase ends match each recorded t2, not just the task mean
     with np.errstate(invalid="ignore", divide="ignore"):
@@ -203,6 +252,7 @@ def to_workload(records: List[Dict], name: str = "replayed",
         site=site, nbytes=np.zeros(t_tasks),
         beta_comp=beta_comp, beta_copy=beta_copy,
         copy_jitter=copy_jitter,
+        overlap=overlap if overlap.any() else None,
     )
 
 

@@ -16,23 +16,33 @@ _EXPORTS = {
     "GovernorReport": "repro.core.governor",
     "IntervalStats": "repro.core.governor",
     # instrument mode helpers (jax-bearing; loaded on first touch)
+    "AsyncCollective": "repro.core.instrument",
     "cd_all_gather": "repro.core.instrument",
+    "cd_all_gather_async": "repro.core.instrument",
     "cd_pmean": "repro.core.instrument",
     "cd_ppermute": "repro.core.instrument",
     "cd_psum": "repro.core.instrument",
+    "cd_psum_async": "repro.core.instrument",
+    "cd_wait": "repro.core.instrument",
     "enable_events": "repro.core.instrument",
     "get_mode": "repro.core.instrument",
+    "reset_instrumentation": "repro.core.instrument",
     "set_event_sink": "repro.core.instrument",
     "set_event_tee": "repro.core.instrument",
     "set_mode": "repro.core.instrument",
+    # theta auto-tuning
+    "ThetaDecision": "repro.core.timeout",
+    "ThetaTuner": "repro.core.timeout",
     # hardware / power model
     "DEFAULT_HW": "repro.core.pstate",
     "HwModel": "repro.core.pstate",
     # policies
     "ALL_POLICIES": "repro.core.policies",
     "BASELINE": "repro.core.policies",
+    "CNTD_ADAPTIVE": "repro.core.policies",
     "COUNTDOWN": "repro.core.policies",
     "COUNTDOWN_SLACK": "repro.core.policies",
+    "FIXED_POLICIES": "repro.core.policies",
     "MINFREQ": "repro.core.policies",
     "Policy": "repro.core.policies",
     # simulator entry points
@@ -49,7 +59,7 @@ _EXPORTS = {
 
 _SUBMODULES = (
     "governor", "instrument", "policies", "predictor", "profiler",
-    "pstate", "simulator", "workloads",
+    "pstate", "simulator", "timeout", "workloads",
 )
 
 __all__ = sorted(_EXPORTS) + list(_SUBMODULES)

@@ -15,6 +15,18 @@ offline, bit-for-bit), and :meth:`Governor.interval_snapshot` reports the
 slack/energy booked since the previous snapshot — the per-epoch
 exploited-slack ratio the :class:`~repro.cluster.arbiter.PowerBudgetArbiter`
 redistributes watts on.
+
+An optional :class:`~repro.core.timeout.ThetaTuner` (``Governor(tuner=)``,
+auto-created for ``theta_mode="adaptive"`` policies) closes the timeout
+feedback loop: each barrier_exit is priced against the tuner's per-site
+theta instead of the policy constant, the observation feeds the site's
+slack histogram, and every adjustment is logged as a structured
+:class:`~repro.core.timeout.ThetaDecision` next to the actuations (and into
+the trace, schema v2, so adaptive runs replay bit-for-bit).  The 5-phase
+taxonomy (``dispatch_enter``/``wait_enter`` from the async collectives)
+books compute/communication overlap as *non-slack*: slack for an async
+pair starts at the wait, and the overlap window is reported separately on
+``GovernorReport.total_overlap``.
 """
 from __future__ import annotations
 
@@ -24,6 +36,7 @@ from typing import Dict, List, NamedTuple, Optional, Tuple
 
 from repro.core.policies import COUNTDOWN_SLACK, Policy
 from repro.core.pstate import DEFAULT_HW, HwModel
+from repro.core.timeout import ThetaDecision, ThetaTuner
 from repro.dist.straggler import StragglerDetector
 
 
@@ -42,9 +55,13 @@ class Actuation(NamedTuple):
 @dataclass
 class CallRecord:
     call_id: int
-    enter: Dict[int, float] = field(default_factory=dict)       # rank -> t
+    enter: Dict[int, float] = field(default_factory=dict)       # rank -> t (slack start)
     slack_end: Dict[int, float] = field(default_factory=dict)
     copy_end: Dict[int, float] = field(default_factory=dict)
+    dispatch: Dict[int, float] = field(default_factory=dict)    # async overlap start
+    theta_used: Dict[int, float] = field(default_factory=dict)  # raw theta armed per
+    # rank at slack end (pricing derives theta_eff from it via HwModel)
+    site: Optional[int] = None   # tuner histogram key override (ingested phases)
 
 
 @dataclass
@@ -58,6 +75,8 @@ class GovernorReport:
     energy_policy: float             # J with the policy's P-state trajectory
     straggler_summary: Dict[int, float]
     stragglers: List[Tuple[int, float]]
+    total_overlap: float = 0.0       # dispatch->wait seconds, accounted NON-slack
+    n_theta_decisions: int = 0       # tuner adjustments booked (0 = fixed theta)
 
     @property
     def energy_saving_pct(self) -> float:
@@ -82,6 +101,8 @@ class GovernorReport:
             "energy_saving_pct": float(self.energy_saving_pct),
             "straggler_summary": {int(r): float(v) for r, v in self.straggler_summary.items()},
             "stragglers": [[int(r), float(z)] for r, z in self.stragglers],
+            "total_overlap": float(self.total_overlap),
+            "n_theta_decisions": int(self.n_theta_decisions),
         }
 
 
@@ -114,18 +135,26 @@ class Governor:
         hw: HwModel = DEFAULT_HW,
         detector: Optional[StragglerDetector] = None,
         recorder=None,
+        tuner: Optional[ThetaTuner] = None,
     ):
         self.policy = policy
         self.hw = hw
         self.detector = detector or StragglerDetector()
         self.recorder = recorder     # cluster.trace.TraceRecorder-compatible
+        if tuner is None and policy.theta_mode == "adaptive":
+            tuner = ThetaTuner(hw=hw, theta0=policy.theta)
+        self.tuner = tuner
         # call_ids are assigned at TRACE time, so the same id recurs on every
         # executed step: rotate to a fresh occurrence when a rank re-enters
         self._calls: Dict[int, CallRecord] = {}
         self._done: List[CallRecord] = []
         self._mark = 0               # interval_snapshot high-water mark
+        self._last_end: Dict[int, float] = {}   # rank -> last phase end (the
+        # enter-minus-this gap is the rank's compute, widening the tuner's
+        # overhead budget to the time-to-completion denominator)
         self._lock = threading.Lock()
         self.actuation_log: List[Actuation] = []
+        self.theta_log: List[ThetaDecision] = []
 
     def _actuate(self, t: float, rank: int, call_id: int, slack: float) -> None:
         pair = (
@@ -137,6 +166,46 @@ class Governor:
             for act in pair:
                 self.recorder.on_actuation(act)
 
+    def _record_theta(self, dec: Optional[ThetaDecision]) -> None:
+        if dec is None:
+            return
+        self.theta_log.append(dec)
+        if self.recorder is not None and hasattr(self.recorder, "on_theta"):
+            self.recorder.on_theta(dec)
+
+    def _close_slack(self, rec: CallRecord, rank: int, t: float) -> None:
+        """Shared barrier_exit tail: price the slack against the (possibly
+        tuned) threshold, book the actuation pair, feed the tuner."""
+        rec.slack_end[rank] = t
+        t0 = rec.enter.get(rank, t)
+        slack = t - t0
+        key = rec.site if rec.site is not None else rec.call_id
+        theta = self.policy.theta
+        if self.tuner is not None:
+            theta = self.tuner.theta_for(key)   # threshold armed BEFORE this obs
+        rec.theta_used[rank] = theta
+        if self.tuner is not None:
+            comp = max(t0 - self._last_end[rank], 0.0) if rank in self._last_end else 0.0
+            self._record_theta(
+                self.tuner.observe_slack(key, slack, t, rank=rank, comp=comp)
+            )
+        self._last_end[rank] = t
+        if slack >= theta and self.policy.comm_mode in ("timeout", "predict_timeout"):
+            self._actuate(t, rank, rec.call_id, slack)
+
+    def _close_copy(self, rec: CallRecord, rank: int, t: float) -> None:
+        rec.copy_end[rank] = t
+        self._last_end[rank] = t
+        if self.tuner is None or rank not in rec.slack_end:
+            return
+        t1 = rec.slack_end[rank]
+        slack = t1 - rec.enter.get(rank, t1)
+        downshifted = slack >= rec.theta_used.get(rank, self.policy.theta)
+        key = rec.site if rec.site is not None else rec.call_id
+        self._record_theta(
+            self.tuner.observe_copy(key, t - t1, t, rank=rank, downshifted=downshifted)
+        )
+
     # the instrument event sink ------------------------------------------------
     def sink(self, rank: int, phase: str, call_id: int, t: float) -> None:
         with self._lock:
@@ -145,21 +214,22 @@ class Governor:
             if self.recorder is not None:
                 self.recorder.on_event(rank, phase, call_id, t)
             rec = self._calls.setdefault(call_id, CallRecord(call_id))
-            if phase == "barrier_enter" and rank in rec.enter:
+            if phase in ("barrier_enter", "dispatch_enter") and (
+                rank in rec.enter or rank in rec.dispatch
+            ):
                 self._done.append(rec)                          # new occurrence
                 rec = CallRecord(call_id)
                 self._calls[call_id] = rec
             if phase == "barrier_enter":
                 rec.enter[rank] = t
+            elif phase == "dispatch_enter":
+                rec.dispatch[rank] = t                          # overlap starts
+            elif phase == "wait_enter":
+                rec.enter[rank] = t                             # slack starts at the wait
             elif phase == "barrier_exit":
-                rec.slack_end[rank] = t
-                slack = t - rec.enter.get(rank, t)
-                if slack >= self.policy.theta and self.policy.comm_mode in (
-                    "timeout", "predict_timeout",
-                ):
-                    self._actuate(t, rank, call_id, slack)
+                self._close_slack(rec, rank, t)
             elif phase == "copy_exit":
-                rec.copy_end[rank] = t
+                self._close_copy(rec, rank, t)
 
     # non-collective event sources ---------------------------------------------
     def ingest_phase(
@@ -169,6 +239,7 @@ class Governor:
         t_enter: float,
         t_slack_end: float,
         t_copy_end: Optional[float] = None,
+        site: Optional[int] = None,
     ) -> None:
         """Book one fully-formed phase from a non-collective source.
 
@@ -176,37 +247,42 @@ class Governor:
         see :mod:`repro.serve.slack`) know the whole phase at once instead of
         streaming enter/exit events; this books the same CallRecord and the
         same timeout-policy actuation the event-sink path would.
+
+        ``site`` keys the theta tuner's histogram when the producer's call
+        ids are unique per phase (serve meters mint a fresh id per step, so
+        without a stable site every phase would start a cold histogram).
         """
         if t_copy_end is None:
             t_copy_end = t_slack_end
-        rec = CallRecord(call_id)
+        rec = CallRecord(call_id, site=site)
         rec.enter[rank] = t_enter
-        rec.slack_end[rank] = t_slack_end
-        rec.copy_end[rank] = t_copy_end
         with self._lock:
             if self.recorder is not None:
-                self.recorder.on_phase(rank, call_id, t_enter, t_slack_end, t_copy_end)
+                self.recorder.on_phase(rank, call_id, t_enter, t_slack_end,
+                                       t_copy_end, site=site)
             self._done.append(rec)
-            slack = t_slack_end - t_enter
-            if slack >= self.policy.theta and self.policy.comm_mode in (
-                "timeout", "predict_timeout",
-            ):
-                self._actuate(t_slack_end, rank, call_id, slack)
+            self._close_slack(rec, rank, t_slack_end)
+            self._close_copy(rec, rank, t_copy_end)
 
     # accounting ---------------------------------------------------------------
-    def _tally(self, records: List[CallRecord]) -> Tuple[int, float, float, float, float, float, float]:
-        """(n_down, slack, copy, busy, exploited, e_base, e_policy) over
-        ``records`` — the shared math behind finalize() and snapshots."""
+    def _tally(self, records: List[CallRecord]) -> Tuple[int, float, float, float, float, float, float, float]:
+        """(n_down, slack, copy, busy, exploited, e_base, e_policy, overlap)
+        over ``records`` — the shared math behind finalize() and snapshots."""
         hw, pol = self.hw, self.policy
-        theta_eff = pol.theta + 0.5 * hw.switch_latency
+        default_theta = pol.theta
         n_down = 0
-        tot_slack = tot_copy = busy = exploited = 0.0
+        tot_slack = tot_copy = busy = exploited = tot_overlap = 0.0
         e_base = e_pol = 0.0
         for rec in records:
             for rank, t0 in rec.enter.items():
                 t1 = rec.slack_end.get(rank)
                 if t1 is None:
                     continue
+                # async pair: [dispatch, enter] is compute/comm overlap — the
+                # core is busy, so it is *not* slack and is not priced here
+                # (the caller's compute never is); it is reported separately
+                if rank in rec.dispatch:
+                    tot_overlap += max(t0 - rec.dispatch[rank], 0.0)
                 slack = max(t1 - t0, 0.0)
                 tot_slack += slack
                 copy = max(rec.copy_end.get(rank, t1) - t1, 0.0)
@@ -214,6 +290,7 @@ class Governor:
                 busy += slack + copy
                 e_base += hw.watts(hw.f_max, hw.act_slack) * slack
                 e_base += hw.watts(hw.f_max, hw.act_copy) * copy
+                theta_eff = hw.theta_eff(rec.theta_used.get(rank, default_theta))
                 low = max(slack - theta_eff, 0.0)
                 if low > 0:
                     n_down += 1
@@ -224,7 +301,7 @@ class Governor:
                     e_pol += hw.watts(hw.f_min, hw.act_copy) * copy
                 else:
                     e_pol += hw.watts(hw.f_max, hw.act_copy) * copy
-        return n_down, tot_slack, tot_copy, busy, exploited, e_base, e_pol
+        return n_down, tot_slack, tot_copy, busy, exploited, e_base, e_pol, tot_overlap
 
     def interval_snapshot(self) -> IntervalStats:
         """Stats over the phases completed since the previous snapshot.
@@ -237,7 +314,7 @@ class Governor:
         with self._lock:
             records = self._done[self._mark:]
             self._mark = len(self._done)
-        n_down, slack, copy, busy, exploited, e_base, e_pol = self._tally(records)
+        n_down, slack, copy, busy, exploited, e_base, e_pol, _ = self._tally(records)
         return IntervalStats(
             n_calls=len(records),
             n_downshifts=n_down,
@@ -254,7 +331,7 @@ class Governor:
         for rec in all_records:
             if rec.enter:
                 self.detector.observe_barrier(rec.enter)
-        n_down, tot_slack, tot_copy, _, exploited, e_base, e_pol = self._tally(all_records)
+        n_down, tot_slack, tot_copy, _, exploited, e_base, e_pol, overlap = self._tally(all_records)
         return GovernorReport(
             n_calls=len(all_records),
             n_downshifts=n_down,
@@ -265,6 +342,8 @@ class Governor:
             energy_policy=e_pol,
             straggler_summary=self.detector.summary(),
             stragglers=self.detector.stragglers(),
+            total_overlap=overlap,
+            n_theta_decisions=len(self.theta_log),
         )
 
     def reset(self) -> None:
@@ -272,4 +351,8 @@ class Governor:
             self._calls.clear()
             self._done.clear()
             self._mark = 0
+            self._last_end.clear()
             self.actuation_log.clear()
+            self.theta_log.clear()
+            if self.tuner is not None:
+                self.tuner.reset()

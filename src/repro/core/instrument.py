@@ -9,6 +9,17 @@ This is the JAX analogue of the paper's PMPI interception layer (§4.1-4.2):
   barrier-exit = slack end, collective-exit = copy end) that drive the host
   :class:`~repro.core.governor.Governor`, which applies the timeout policy.
 
+* ``cd_psum_async`` / ``cd_all_gather_async`` + ``cd_wait`` are the
+  nonblocking-collective analogue (``MPI_Iallreduce`` + ``MPI_Wait``).  They
+  extend the 3-phase barrier/copy taxonomy to 5 phases: ``dispatch_enter``
+  at the async start and ``wait_enter`` when the caller blocks.  The window
+  ``[dispatch_enter, wait_enter]`` is compute/communication *overlap* — the
+  core is busy, so the governor accounts it as non-slack instead of letting
+  it silently inflate the slack (and get mispriced at the min P-state while
+  the rank is actually computing).  Slack for an async pair starts at the
+  wait, exactly as the paper's P2P ``Isend + Wait`` barrier starts at the
+  wait.
+
 * The instrumentation mode is ambient (``set_mode``), mirroring the paper's
   LD_PRELOAD transparency: model / optimizer code always calls the wrappers
   and pays zero cost when the mode is "off".
@@ -22,7 +33,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, Optional, Sequence, Union
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +47,15 @@ _SINK: Optional[Callable[[int, str, int, float], None]] = None
 _TEE: Optional[Callable[[int, str, int, float], None]] = None
 _LOCK = threading.Lock()
 _CALL_COUNTER = [0]
+
+# the 5-phase event taxonomy (codes are what crosses the io_callback wire)
+PHASE_NAMES = {
+    0: "barrier_enter",      # blocking call entered; slack starts
+    1: "barrier_exit",       # artificial barrier resolved; slack ends
+    2: "copy_exit",          # real collective done; copy ends
+    3: "dispatch_enter",     # async collective dispatched; overlap starts
+    4: "wait_enter",         # caller blocks on the async handle; slack starts
+}
 
 
 def set_mode(mode: str) -> None:
@@ -76,11 +96,28 @@ def set_event_tee(tee: Optional[Callable[[int, str, int, float], None]]) -> None
     _TEE = tee
 
 
+def reset_instrumentation() -> None:
+    """Restore every piece of ambient instrumentation state to its default:
+    mode off, events disabled, no sink/tee, call counter at zero.
+
+    Ambient state otherwise leaks across tests (a sink installed by one
+    test keeps timestamping the next test's collectives); the tier-1
+    ``conftest.py`` calls this around every test.
+    """
+    global _MODE, _EVENTS_ENABLED, _SINK, _TEE
+    _MODE = "off"
+    _EVENTS_ENABLED = False
+    _SINK = None
+    _TEE = None
+    with _LOCK:
+        _CALL_COUNTER[0] = 0
+
+
 def _emit(rank, phase_code, call_id) -> None:
     """Host-side callback: timestamp and forward to the governor sink."""
     if _SINK is None and _TEE is None:
         return
-    phase = {0: "barrier_enter", 1: "barrier_exit", 2: "copy_exit"}[int(phase_code)]
+    phase = PHASE_NAMES[int(phase_code)]
     t = time.monotonic()
     if _SINK is not None:
         _SINK(int(rank), phase, int(call_id), t)
@@ -100,14 +137,16 @@ def _next_call_id() -> int:
         return _CALL_COUNTER[0]
 
 
-def _barrier_token(tree: Any, axes: AxisNames) -> jnp.ndarray:
-    """The artificial barrier: a 1-element all-reduce over ``axes``.
-
-    Derived from live data so the partitioner cannot constant-fold it away.
-    """
+def _probe(tree: Any) -> jnp.ndarray:
+    """A 1-element probe derived from live data, so the partitioner cannot
+    constant-fold the barrier built on it away."""
     leaf = jax.tree.leaves(tree)[0]
-    probe = jnp.real(jnp.ravel(leaf)[0]).astype(jnp.float32) * 0.0 + 1.0
-    return lax.psum(probe, axes)
+    return jnp.real(jnp.ravel(leaf)[0]).astype(jnp.float32) * 0.0 + 1.0
+
+
+def _barrier_token(tree: Any, axes: AxisNames) -> jnp.ndarray:
+    """The artificial barrier: a 1-element all-reduce over ``axes``."""
+    return lax.psum(_probe(tree), axes)
 
 
 def _instrumented(real_op: Callable[[Any], Any], tree: Any, axes: AxisNames) -> Any:
@@ -146,6 +185,87 @@ def cd_pmean(tree: Any, axes: AxisNames) -> Any:
 
 def cd_all_gather(tree: Any, axes: AxisNames, *, axis: int = 0, tiled: bool = True) -> Any:
     return _instrumented(
+        lambda t: jax.tree.map(lambda a: lax.all_gather(a, axes, axis=axis, tiled=tiled), t),
+        tree, axes,
+    )
+
+
+class AsyncCollective(NamedTuple):
+    """Handle returned by ``cd_*_async``: the dispatched result plus the
+    bookkeeping ``cd_wait`` needs to close the 5-phase event sequence."""
+
+    result: Any
+    axes: Any                    # AxisNames; static within the traced region
+    call_id: int                 # 0 when mode is off (no events were armed)
+    profile: bool
+    rank: Any                    # traced axis index, None unless profiling
+    probe: Any                   # 1-element probe from the INPUT tree: the
+    # wait-side barrier must resolve on rank arrival, independent of the
+    # in-flight payload (else the transfer would be booked as slack)
+
+
+def _async_start(real_op: Callable[[Any], Any], tree: Any, axes: AxisNames) -> AsyncCollective:
+    """Dispatch an async collective: emit ``dispatch_enter`` and launch the
+    real op.  Whatever the caller computes between start and ``cd_wait`` is
+    the overlap window — accounted as non-slack by the governor."""
+    mode = _MODE
+    if mode == "off":
+        return AsyncCollective(real_op(tree), axes, 0, False, None, None)
+    call_id = _next_call_id()
+    profile = mode == "profile" and _EVENTS_ENABLED
+    rank = None
+    if profile:
+        rank = lax.axis_index(axes if isinstance(axes, str) else axes[0])
+        _host_event(rank, 3, call_id)                 # dispatch enter (overlap start)
+    return AsyncCollective(real_op(tree), axes, call_id, profile, rank,
+                           _probe(tree))
+
+
+def cd_wait(handle: AsyncCollective) -> Any:
+    """Block on an async collective (the ``MPI_Wait`` analogue).
+
+    Emits ``wait_enter`` (slack starts HERE, not at dispatch), runs the
+    artificial barrier that isolates the remaining wait, then forces the
+    dispatched result: ``barrier_exit`` closes the slack, ``copy_exit``
+    closes the copy remainder — same tail as the blocking wrappers, so the
+    governor reconstructs async and sync calls with one code path.
+
+    The barrier token is a 1-element psum over the *input* probe carried on
+    the handle — deliberately independent of the dispatched payload, so it
+    resolves on rank arrival at the wait (the slack the paper isolates).
+    Deriving it from the result would tie the barrier to the in-flight
+    transfer: the wire time would be priced as exploitable slack and the
+    copy remainder would collapse to zero, losing the copy-at-full-speed
+    protection the slack scope exists for.
+    """
+    if handle.call_id == 0:                           # dispatched with mode off
+        return handle.result
+    out = handle.result
+    if handle.profile:
+        _host_event(handle.rank, 4, handle.call_id)   # wait enter (slack start)
+    token = lax.psum(handle.probe, handle.axes)       # ---- artificial barrier ----
+    if handle.profile:
+        token = lax.optimization_barrier(token)
+        _host_event(handle.rank, 1, handle.call_id)   # barrier exit (slack end)
+    # the payload is forced only after the barrier: what remains of the
+    # transfer past this point is the copy phase
+    out, token = lax.optimization_barrier((out, token))
+    if handle.profile:
+        _host_event(handle.rank, 2, handle.call_id)   # copy exit
+    return out
+
+
+def cd_psum_async(tree: Any, axes: AxisNames) -> AsyncCollective:
+    """Nonblocking ``cd_psum``: start/wait pair (``MPI_Iallreduce`` analogue)."""
+    return _async_start(
+        lambda t: jax.tree.map(lambda a: lax.psum(a, axes), t), tree, axes
+    )
+
+
+def cd_all_gather_async(tree: Any, axes: AxisNames, *, axis: int = 0,
+                        tiled: bool = True) -> AsyncCollective:
+    """Nonblocking ``cd_all_gather``: start/wait pair."""
+    return _async_start(
         lambda t: jax.tree.map(lambda a: lax.all_gather(a, axes, axis=axis, tiled=tiled), t),
         tree, axes,
     )

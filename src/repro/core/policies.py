@@ -17,6 +17,10 @@ Each policy is a declarative config consumed by the vectorized engine in
   cntd_slack    — COUNTDOWN Slack (the paper): artificial barrier isolates
                   the slack; 500 us reactive timer applies min P-state to
                   slack ONLY; copy runs at max P-state.
+  cntd_adaptive — cntd_slack with the fixed 500 us replaced by the online
+                  ThetaTuner (repro.core.timeout): per-site slack-CDF decay
+                  bounded by the 1% overhead budget, AIMD raise on observed
+                  copy slowdown, clamped to [switch_latency/2, theta_max].
 """
 from __future__ import annotations
 
@@ -29,9 +33,10 @@ class Policy:
     compute_mode: str = "max"       # max | min | andante
     comm_mode: str = "none"         # none | timeout | predict_timeout | pin_min
     comm_scope: str = "comm"        # comm (slack+copy) | slack (barrier-isolated)
-    theta: float = 500e-6           # timeout duration (s)
+    theta: float = 500e-6           # timeout duration (s); theta0 when adaptive
     uses_hash: bool = False         # per-call stack-hash + lookup cost
     uses_barrier: bool = False      # artificial barrier inserted (cost + isolation)
+    theta_mode: str = "fixed"       # fixed | adaptive (online ThetaTuner)
 
 
 BASELINE = Policy("baseline")
@@ -57,11 +62,31 @@ COUNTDOWN_SLACK = Policy(
     "cntd_slack", comm_mode="timeout", comm_scope="slack",
     theta=500e-6, uses_barrier=True,
 )
+CNTD_ADAPTIVE = Policy(
+    "cntd_adaptive", comm_mode="timeout", comm_scope="slack",
+    theta=500e-6, uses_barrier=True, theta_mode="adaptive",
+)
 
-ALL_POLICIES = {
-    p.name: p
-    for p in [
-        BASELINE, MINFREQ, FERMATA_100MS, FERMATA_500US,
-        ANDANTE, ADAGIO, COUNTDOWN, COUNTDOWN_SLACK,
-    ]
-}
+# the 8 fixed-theta policies the paper evaluates — frozen by the golden
+# conformance suite (tests/test_golden.py); cntd_adaptive rides on top
+FIXED_POLICIES = [
+    BASELINE, MINFREQ, FERMATA_100MS, FERMATA_500US,
+    ANDANTE, ADAGIO, COUNTDOWN, COUNTDOWN_SLACK,
+]
+
+ALL_POLICIES = {p.name: p for p in FIXED_POLICIES + [CNTD_ADAPTIVE]}
+
+
+def policy_for_theta(theta: str, base: Policy = COUNTDOWN_SLACK) -> Policy:
+    """Resolve a CLI ``--theta`` value against ``base``: ``""`` keeps it
+    untouched, ``"auto"`` switches it to adaptive mode (the governor
+    attaches an online :class:`~repro.core.timeout.ThetaTuner`; the base's
+    scope/costs/theta0 are honored), anything else parses as a fixed
+    timeout in seconds."""
+    if not theta:
+        return base
+    from dataclasses import replace
+
+    if theta == "auto":
+        return replace(base, theta_mode="adaptive", name="cntd_adaptive")
+    return replace(base, theta=float(theta))

@@ -82,5 +82,23 @@ class HwModel:
         f = np.asarray(f, dtype=np.float64)
         return (1.0 - beta) + beta * (self.f_max / f)
 
+    def theta_eff(self, theta: float) -> float:
+        """Effective timeout threshold: timer expiry plus the expected PCU
+        commit quantization (half the commit interval).  The one formula
+        both the governor's pricing and the simulator's trajectory use —
+        keep them identical or replay loses bit-exactness."""
+        return theta + 0.5 * self.switch_latency
+
+    def theta_bounds(self, theta_max: float = 50e-3) -> Tuple[float, float]:
+        """Realizable reactive-timeout range ``[switch_latency/2, theta_max]``.
+
+        Below half the PCU commit interval the timer fires faster than the
+        hardware can commit the P-state change, so a smaller theta cannot
+        be realized; above ``theta_max`` the timeout never fires in practice
+        and the policy degenerates to baseline.  The :class:`~repro.core.
+        timeout.ThetaTuner` clamps every adjustment to this interval.
+        """
+        return (self.switch_latency / 2.0, theta_max)
+
 
 DEFAULT_HW = HwModel()

@@ -47,6 +47,9 @@ class Workload:
     beta_comp: float = 0.3      # CPU-bound fraction of compute
     beta_copy: float = 0.15     # CPU-bound fraction of copy
     copy_jitter: Optional[np.ndarray] = None    # (T,N) per-rank copy factor
+    overlap: Optional[np.ndarray] = None        # (T,) async dispatch->wait secs:
+                                                # compute hidden under the flying
+                                                # collective (non-slack)
 
     @property
     def n_tasks(self) -> int:
@@ -70,6 +73,10 @@ class SimResult:
     calls: int
     power_dt: float = 0.0                           # bin width (s), 0 = off
     power_series: Optional[np.ndarray] = None       # (n_bins, n_ranks) watts
+    toverlap: float = 0.0                           # overlap booked non-slack (s)
+    theta_series: Optional[np.ndarray] = None       # (T,) theta_eff armed per task
+    theta_bins: Optional[np.ndarray] = None         # (n_bins,) theta_eff active
+                                                    # per power_dt bin
 
     def overhead_vs(self, base: "SimResult") -> float:
         return 100.0 * (self.time / base.time - 1.0)
@@ -154,6 +161,7 @@ def simulate(
     collect_trace: bool = False,
     power_dt: Optional[float] = None,
     power_cap: Optional[float] = None,
+    overlap_aware: bool = True,
 ) -> Tuple[SimResult, Optional[TraceRecord]]:
     """Run ``wl`` under ``pol``.
 
@@ -166,6 +174,23 @@ def simulate(
     workload's ranks: the RAPL semantics, enforced by clamping every
     frequency the policy would choose to ``hw.f_for_power(cap / n_ranks)``
     (inverted at compute activity, the worst case).
+
+    ``overlap_aware`` governs how ``Workload.overlap`` (async dispatch->wait
+    compute hidden under a flying collective) is accounted.  Aware (the
+    5-phase taxonomy, default): overlapped seconds are busy compute — priced
+    at compute activity, excluded from slack, never downshifted.  Unaware
+    (the legacy 3-phase view, for contrast): the whole in-barrier window
+    counts as slack, so the timeout can pin the core *while it is computing*
+    — the pinned overlap stalls the hidden compute and the rank pays the
+    lost work back after the barrier (the "misprediction jeopardizes the
+    benefit" failure mode, measurable).
+
+    ``theta_mode="adaptive"`` policies run an online
+    :class:`~repro.core.timeout.ThetaTuner`: theta for task ``k`` is the
+    tuner's per-site value armed *before* observing task ``k`` (same
+    causality as the live governor).  The per-task thresholds come back on
+    ``SimResult.theta_series`` (and, with ``power_dt``, resampled onto the
+    power bins as ``theta_bins``).
     """
     n, t_tasks = wl.n_ranks, wl.n_tasks
     fmax, fmin, lat = hw.f_max, hw.f_min, hw.switch_latency
@@ -179,7 +204,15 @@ def simulate(
     ell = np.zeros(n)                                   # pinned-at-fmin residue
     energy = np.zeros(n)
     tcomp = tslack = tcopy = 0.0
-    exploited = exploited_slack = 0.0
+    exploited = exploited_slack = toverlap = 0.0
+
+    tuner = None
+    if pol.theta_mode == "adaptive" and pol.comm_mode == "timeout":
+        from repro.core.timeout import ThetaTuner   # deferred: keeps import light
+
+        tuner = ThetaTuner(hw=hw, theta0=pol.theta)
+    theta_series = np.full(t_tasks, np.nan)
+    t_arm = np.zeros(t_tasks)                           # theta arm time per task
 
     # per-site last-value tables
     n_sites = wl.n_sites
@@ -193,9 +226,6 @@ def simulate(
 
     # (start, duration, energy) per-rank segments for the power series
     segs: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
-
-    # effective timeout: timer expiry + expected PCU commit quantization
-    theta_eff = pol.theta + 0.5 * lat
 
     for k in range(t_tasks):
         site = int(wl.site[k])
@@ -242,7 +272,46 @@ def simulate(
         else:
             t_bar = np.full(n, arrival.max())
         slack = t_bar - arrival
-        tslack += float(slack.sum())
+
+        # ---- overlap isolation (5-phase accounting) ----
+        # dispatch->wait: EVERY rank (critical one included) computes ov_k
+        # seconds under the flying collective before blocking on the wait,
+        # so the barrier resolves ov_k later and per-rank slack is
+        # unchanged — the overlap must not be clamped by emergent slack or
+        # the critical rank's overlapped compute would vanish from time,
+        # energy and toverlap
+        ov_k = float(wl.overlap[k]) if wl.overlap is not None else 0.0
+        if ov_k > 0.0:
+            ov = np.full(n, ov_k)
+            t_bar = t_bar + ov_k
+            if overlap_aware:
+                window = slack                          # t_bar - (arrival + ov)
+                window_start = arrival + ov
+                e_ov = hw.watts(f_comp, hw.act_comp) * ov
+                energy += e_ov
+                if power_dt:
+                    segs.append((arrival, ov, e_ov))
+                toverlap += float(ov.sum())
+            else:
+                # 3-phase view: slack measured from dispatch — inflated by
+                # the busy overlap, which the timeout may then pin (energy
+                # for the overlap span is priced below, once the pinned
+                # split is known)
+                window = slack + ov
+                window_start = arrival
+        else:
+            ov = None
+            window = slack
+            window_start = arrival
+        tslack += float(window.sum())
+
+        # ---- per-task theta: the policy constant, or the tuner's value
+        # armed before this task's slack is observed (online causality) ----
+        theta_k = tuner.theta_for(site) if tuner is not None else pol.theta
+        theta_eff = hw.theta_eff(theta_k)               # + PCU commit quantization
+        if pol.comm_mode in ("timeout", "predict_timeout"):
+            theta_series[k] = theta_eff
+        t_arm[k] = float(arrival.min())
 
         # ---- slack trajectory ----
         if pol.comm_mode == "pin_min":                  # minfreq: already low
@@ -251,27 +320,63 @@ def simulate(
             f_slack_hi = np.full(n, fmin)
         elif pol.comm_mode == "timeout":
             armed = np.ones(n, dtype=bool)
-            t_hi = np.minimum(slack, theta_eff)
+            t_hi = np.minimum(window, theta_eff)
             f_slack_hi = f_comp
         elif pol.comm_mode == "predict_timeout":        # fermata
-            armed = np.nan_to_num(last_comm[site], nan=0.0) >= 2.0 * pol.theta
-            t_hi = np.where(armed, np.minimum(slack, theta_eff), slack)
+            armed = np.nan_to_num(last_comm[site], nan=0.0) >= 2.0 * theta_k
+            t_hi = np.where(armed, np.minimum(window, theta_eff), window)
             f_slack_hi = f_comp
         else:                                           # none
             armed = np.zeros(n, dtype=bool)
-            t_hi = slack
+            t_hi = window
             f_slack_hi = f_comp
-        t_lo = slack - t_hi
-        e_slack = hw.watts(f_slack_hi, hw.act_slack) * t_hi
-        e_slack = e_slack + hw.watts(fmin, hw.act_slack) * t_lo
+        t_lo = window - t_hi
+        if ov is not None and not overlap_aware:
+            # unaware contrast: the window's head is busy overlap, not idle.
+            # The timer cannot tell: past theta_eff it pins the core WHILE
+            # IT COMPUTES — the pinned overlap runs compute at f_min and
+            # the lost work is paid back after the barrier (delaying this
+            # rank); only the idle tail is true slack-activity time
+            pinned_ov = np.maximum(ov - t_hi, 0.0)
+            e_ov = hw.watts(f_comp, hw.act_comp) * (ov - pinned_ov)
+            e_ov = e_ov + hw.watts(fmin, hw.act_comp) * pinned_ov
+            energy += e_ov
+            if power_dt:
+                segs.append((arrival, ov, e_ov))
+            t_hi_idle = np.maximum(t_hi - ov, 0.0)
+            e_slack = hw.watts(f_slack_hi, hw.act_slack) * t_hi_idle
+            e_slack = e_slack + hw.watts(fmin, hw.act_slack) * (slack - t_hi_idle)
+            seg_start, seg_dur = arrival + ov, slack
+            penalty = pinned_ov * (hw.slowdown(fmin, wl.beta_comp) - 1.0)
+            e_pen = hw.watts(f_run, hw.act_comp) * penalty
+            energy += e_pen
+            # the payback window sits AFTER the copy phase — its power
+            # series segment is appended once d_copy is known, so the bins
+            # around t_bar don't stack copy + payback watts while the real
+            # payback window reads zero
+        else:
+            e_slack = hw.watts(f_slack_hi, hw.act_slack) * t_hi
+            e_slack = e_slack + hw.watts(fmin, hw.act_slack) * t_lo
+            seg_start, seg_dur = window_start, window
+            penalty = 0.0
+            e_pen = None
         energy += e_slack
         if power_dt:
-            segs.append((arrival, slack, e_slack))
+            segs.append((seg_start, seg_dur, e_slack))
         exploited += float(t_lo.sum())
         exploited_slack += float(t_lo.sum())
         if pol.comm_mode == "pin_min":
-            exploited += float(slack.sum())
-            exploited_slack += float(slack.sum())
+            exploited += float(window.sum())
+            exploited_slack += float(window.sum())
+
+        if tuner is not None:
+            # busy denominator must match the live governor's: its comp gap
+            # (enter minus previous phase end) spans the dispatch->wait
+            # overlap, so count ov here too (unaware mode already carries
+            # it inside the inflated window)
+            comp_obs = d_comp + ov if (ov is not None and overlap_aware) else d_comp
+            tuner.observe_slack_batch(site, window, t=float(t_bar.max()),
+                                      comp=comp_obs)
 
         # ---- copy phase ----
         wc = float(wl.copy[k])
@@ -287,7 +392,7 @@ def simulate(
             elif pol.comm_mode in ("timeout", "predict_timeout") and pol.comm_scope == "comm":
                 # timer keeps running inside the MPI call: after theta_eff
                 # total in-call time, frequency drops; copy may start below it
-                t_to_fire = np.where(armed, np.maximum(theta_eff - slack, 0.0), np.inf)
+                t_to_fire = np.where(armed, np.maximum(theta_eff - window, 0.0), np.inf)
                 d_copy, e_copy, t_min_in_copy = _two_rate_phase(
                     hw, wc_r, wl.beta_copy, t_to_fire, f_run, hw.act_copy
                 )
@@ -307,12 +412,30 @@ def simulate(
             if power_dt:
                 segs.append((t_bar, d_copy, e_copy))
             exploited += float(np.sum(t_min_in_copy))
-            t = t_bar + d_copy
+            t = t_bar + d_copy + penalty
+            if power_dt and e_pen is not None:
+                segs.append((t_bar + d_copy, penalty, e_pen))
+            if tuner is not None:
+                # feedback: realized copy slowdown of this task's downshifted
+                # ranks vs the residue-free copy (known exactly offline, the
+                # EMA estimate live) — the AIMD raise trigger
+                base_copy = wc_r * hw.slowdown(f_run, wl.beta_copy)
+                pinned = t_lo > 0
+                extra = frac = 0.0
+                if pinned.any():
+                    extra = float(np.max(d_copy[pinned] - base_copy[pinned]))
+                    frac = float(np.max(
+                        d_copy[pinned] / np.maximum(base_copy[pinned], 1e-30) - 1.0
+                    ))
+                tuner.observe_copy_slowdown(site, float(d_copy.sum()), extra,
+                                            frac, t=float(t.max()))
         else:
             # pure synchronization primitive: restore pins next compute
             if pol.comm_scope == "slack" or pol.comm_mode in ("timeout", "predict_timeout"):
                 ell = np.where(t_lo > 0, lat, ell)
-            t = t_bar
+            t = t_bar + penalty
+            if power_dt and e_pen is not None:
+                segs.append((t_bar, penalty, e_pen))
 
         # ---- table updates (what the runtime could actually measure) ----
         if pol.comm_mode == "predict_timeout":
@@ -334,6 +457,16 @@ def simulate(
         for t0_seg, dur_seg, e_seg in segs:
             _bin_energy(power_series, power_dt, t0_seg, dur_seg, e_seg)
 
+    has_theta = bool(np.isfinite(theta_series).any())
+    theta_bins = None
+    if power_series is not None and has_theta:
+        # theta as a per-bin series: the threshold armed at each power bin
+        # (piecewise-constant between task arm times)
+        bin_end = (np.arange(power_series.shape[0]) + 1) * power_dt
+        idx = np.clip(np.searchsorted(t_arm, bin_end, side="right") - 1,
+                      0, t_tasks - 1)
+        theta_bins = theta_series[idx]
+
     res = SimResult(
         name=pol.name,
         time=float(t.max()),
@@ -346,6 +479,9 @@ def simulate(
         calls=t_tasks,
         power_dt=power_dt or 0.0,
         power_series=power_series,
+        toverlap=toverlap,
+        theta_series=theta_series if has_theta else None,
+        theta_bins=theta_bins,
     )
     trace = (
         TraceRecord(wl.site, wl.is_p2p, wl.nbytes, trace_comp, trace_slack, trace_copy)
@@ -362,7 +498,7 @@ def simulate(
 
 def coverage_on_trace(trace: TraceRecord, pol: Policy, hw: HwModel = DEFAULT_HW) -> float:
     """Fraction [%] of total rank-time the policy would run at f_min."""
-    theta_eff = pol.theta + 0.5 * hw.switch_latency
+    theta_eff = hw.theta_eff(pol.theta)
     slack, copy = trace.slack, trace.copy
     total = trace.comp.sum() + slack.sum() + copy.sum()
     n_sites = int(trace.site.max()) + 1

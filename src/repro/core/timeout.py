@@ -1,0 +1,253 @@
+"""Online theta auto-tuning: close the loop the fixed 500 us timeout leaves open.
+
+The paper tunes its reactive timeout once, to one machine's PCU commit
+latency (COUNTDOWN Slack §5).  That constant is the single shared knob of
+every policy in :mod:`repro.core.policies` — and a misprediction in either
+direction "jeopardizes the benefit": too low and the restore latency bleeds
+into the copy/compute phases (overhead), too high and exploitable slack is
+left on the table (lost saving).  :class:`ThetaTuner` replaces the constant
+with a measured quantity per call site:
+
+* **Slack CDF target (decay)** — each site keeps a log-binned histogram of
+  its observed slack.  Downshifting a call costs one PCU residue: the
+  restore pins the next phase at f_min for up to ``switch_latency``, which
+  stretches that phase by ``c ~= residue_cost_frac * switch_latency``
+  (the fraction is the time lost to running a partially CPU-bound phase at
+  f_min — ~0.15 for the calibrated beta range; the AIMD loop below corrects
+  the prior when a phase is hungrier).  The tuner picks the smallest
+  threshold whose downshift cost stays under ``target_overhead`` of the
+  busy time observed at that site::
+
+      theta_target = min { theta : c * N_down(theta) <= rho * T_busy }
+
+  with ``N_down(theta) = #{slack >= theta}``, ``T_busy`` the accumulated
+  compute+slack+copy seconds observed at the site (the governor measures
+  compute as the gap from a rank's previous phase end to its barrier
+  enter, so the budget is a fraction of *time to completion*, the paper's
+  bar — not of the comm window alone), and ``rho = target_overhead``
+  (1 % by default).  ``theta_eff`` then relaxes toward the target
+  geometrically: ``theta += decay * (theta_target - theta)``.
+
+* **AIMD raise** — prediction is checked against the one signal the
+  runtime can actually observe: the copy phase directly after a downshift.
+  If a downshifted call's copy ran ``slow_tol`` slower than the site's
+  reference (EMA live, exact offline) *and* the extra seconds are material
+  against the per-call overhead budget (``rho * mean busy``), the model
+  under-priced the residue — theta is raised multiplicatively
+  (``raise_factor``) and allowed to decay back.  This is the classic
+  congestion-control shape: gentle probing toward the CDF target, sharp
+  backoff on observed harm.  The materiality condition keeps a relatively
+  slow but tiny copy (60 us extra on a 30 ms task) from stampeding theta
+  upward.
+
+* **Hard bounds** — theta is always clamped to
+  ``[switch_latency / 2, theta_max]`` (:meth:`HwModel.theta_bounds`): below
+  half the commit interval the timer fires faster than the PCU can commit,
+  so a lower theta cannot be realized in hardware; above ``theta_max`` the
+  timeout never fires and the policy degenerates to baseline.
+
+Every adjustment is a structured :class:`ThetaDecision`; the governor logs
+them next to actuations and the trace recorder serializes them (schema v2),
+so an adaptive run replays bit-for-bit: the tuner is a pure function of the
+observation order.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, NamedTuple, Optional
+
+import numpy as np
+
+from repro.core.pstate import DEFAULT_HW, HwModel
+
+
+class ThetaDecision(NamedTuple):
+    """One tuner adjustment (structured like :class:`~repro.core.governor.
+    Actuation`, so recorders and benchmarks consume it without scraping)."""
+
+    t: float
+    site: int
+    rank: int                    # -1 for batched (simulator) observations
+    theta_before: float
+    theta_after: float
+    reason: str                  # "decay" | "raise"
+    slack: float                 # observation that triggered it (copy for raises)
+
+
+@dataclass
+class _SiteState:
+    theta: float
+    counts: np.ndarray           # histogram over the shared log bin edges
+    busy: float = 0.0            # accumulated compute + slack + copy seconds
+    n_slack: int = 0
+    copy_ema: Optional[float] = None   # residue-free copy reference
+    copy_min: Optional[float] = None   # least-stretched downshifted copy:
+    # the fallback reference for sites where every call downshifts
+
+
+@dataclass
+class ThetaTuner:
+    """Per-callsite online theta adaptation against the measured HwModel.
+
+    Deterministic given the observation order — the property the trace
+    replay differential test pins down.
+    """
+
+    hw: HwModel = DEFAULT_HW
+    theta0: float = 500e-6
+    theta_max: float = 50e-3
+    target_overhead: float = 0.01    # rho: downshift cost bound vs busy time
+    decay: float = 0.25              # geometric pull toward the CDF target
+    raise_factor: float = 2.0        # AIMD multiplicative backoff
+    slow_tol: float = 0.10           # relative copy slowdown raise trigger
+    residue_cost_frac: float = 0.15  # expected time lost per pinned residue
+    ema_alpha: float = 0.2           # copy reference EMA weight
+    min_samples: int = 8             # observations before leaving theta0
+    decision_tol: float = 1e-9       # suppress no-op decision records
+
+    def __post_init__(self) -> None:
+        self.theta_min, _ = self.hw.theta_bounds(self.theta_max)
+        self.theta0 = self._clamp(self.theta0)
+        # shared log-spaced slack bins: 1 us .. 30 s
+        self._edges = np.geomspace(1e-6, 30.0, 97)
+        self._sites: Dict[int, _SiteState] = {}
+        self.decisions: List[ThetaDecision] = []
+        # expected per-downshift cost: the pinned residue's time stretch
+        self._c_down = self.residue_cost_frac * self.hw.switch_latency
+
+    # ---- queries ---------------------------------------------------------
+    def _clamp(self, theta: float) -> float:
+        return float(min(max(theta, self.hw.switch_latency / 2.0), self.theta_max))
+
+    def theta_for(self, site: int) -> float:
+        """Current theta for ``site`` (theta0, clamped, when unseen)."""
+        st = self._sites.get(site)
+        return st.theta if st is not None else self.theta0
+
+    def summary(self) -> Dict[int, float]:
+        return {site: st.theta for site, st in self._sites.items()}
+
+    # ---- internals -------------------------------------------------------
+    def _state(self, site: int) -> _SiteState:
+        st = self._sites.get(site)
+        if st is None:
+            st = _SiteState(theta=self.theta0,
+                            counts=np.zeros(len(self._edges) - 1, np.int64))
+            self._sites[site] = st
+        return st
+
+    def _target(self, st: _SiteState) -> float:
+        """Smallest threshold whose worst-case downshift cost respects the
+        overhead budget — the percentile of the slack CDF the docstring
+        derives.  Conservative (theta0) until ``min_samples`` accrue."""
+        if st.n_slack < self.min_samples or st.busy <= 0.0:
+            return self.theta0
+        total = int(st.counts.sum())
+        budget = self.target_overhead * st.busy
+        # N_down(edge[i]) = samples at or above edge i = total - cum[i]
+        cum = np.concatenate(([0], np.cumsum(st.counts)))
+        n_down = total - cum
+        feasible = self._c_down * n_down <= budget
+        idx = int(np.argmax(feasible)) if feasible.any() else len(self._edges) - 1
+        return self._clamp(float(self._edges[idx]))
+
+    def _decide(self, st: _SiteState, site: int, rank: int, t: float,
+                new_theta: float, reason: str, obs: float) -> Optional[ThetaDecision]:
+        new_theta = self._clamp(new_theta)
+        # relative suppression: the geometric decay approaches its target
+        # asymptotically — without this, every observation would log an
+        # ever-smaller no-op decision into the trace forever
+        if abs(new_theta - st.theta) <= self.decision_tol + 1e-4 * st.theta:
+            st.theta = new_theta
+            return None
+        dec = ThetaDecision(t, site, rank, st.theta, new_theta, reason, obs)
+        st.theta = new_theta
+        self.decisions.append(dec)
+        return dec
+
+    # ---- observations (governor path: scalar, event-ordered) -------------
+    def observe_slack(self, site: int, slack: float, t: float, rank: int = 0,
+                      comp: float = 0.0) -> Optional[ThetaDecision]:
+        """Account one measured slack (plus the ``comp`` seconds that led
+        into the call, when the caller can measure them — they widen the
+        overhead budget to the paper's time-to-completion denominator);
+        relax theta toward the CDF target."""
+        st = self._state(site)
+        slack = max(float(slack), 0.0)
+        b = int(np.clip(np.searchsorted(self._edges, slack, side="right") - 1,
+                        0, len(st.counts) - 1))
+        st.counts[b] += 1
+        st.busy += slack + max(float(comp), 0.0)
+        st.n_slack += 1
+        target = self._target(st)
+        return self._decide(st, site, rank, t,
+                            st.theta + self.decay * (target - st.theta),
+                            "decay", slack)
+
+    def _raise_budget(self, st: _SiteState) -> float:
+        """Extra seconds per call that breach the overhead target: rho times
+        the mean per-observation busy time at this site."""
+        return self.target_overhead * st.busy / max(st.n_slack, 1)
+
+    def observe_copy(self, site: int, copy: float, t: float, rank: int = 0,
+                     downshifted: bool = False) -> Optional[ThetaDecision]:
+        """Account a copy phase; AIMD-raise if a downshifted call's copy ran
+        ``slow_tol`` over the site's EMA reference (the residue bled) by a
+        margin that matters against the overhead budget."""
+        st = self._state(site)
+        copy = max(float(copy), 0.0)
+        st.busy += copy
+        dec = None
+        # the reference must stay residue-free: an EMA of clean copies when
+        # the site has any, else the least-stretched downshifted copy seen
+        # (a downshifted copy must never SEED the EMA — on a site whose
+        # first call downshifts, that would lock the reference at the
+        # stretched duration and permanently disarm the raise)
+        ref = st.copy_ema if st.copy_ema is not None else st.copy_min
+        if (downshifted and ref is not None
+                and copy > ref * (1.0 + self.slow_tol)
+                and copy - ref > self._raise_budget(st)):
+            dec = self._decide(st, site, rank, t, st.theta * self.raise_factor,
+                               "raise", copy)
+        if downshifted:
+            st.copy_min = copy if st.copy_min is None else min(st.copy_min, copy)
+        elif st.copy_ema is None:
+            st.copy_ema = copy
+        else:
+            st.copy_ema = (1.0 - self.ema_alpha) * st.copy_ema + self.ema_alpha * copy
+        return dec
+
+    # ---- observations (simulator path: one batch per task) ---------------
+    def observe_slack_batch(self, site: int, slacks: np.ndarray, t: float,
+                            comp: Optional[np.ndarray] = None) -> Optional[ThetaDecision]:
+        """Vectorized :meth:`observe_slack`: histogram the whole rank vector,
+        apply ONE decay step (the task is one decision epoch)."""
+        st = self._state(site)
+        slacks = np.maximum(np.asarray(slacks, np.float64), 0.0)
+        hist, _ = np.histogram(np.clip(slacks, self._edges[0], self._edges[-1]),
+                               bins=self._edges)
+        st.counts += hist
+        st.busy += float(slacks.sum())
+        if comp is not None:
+            st.busy += float(np.maximum(np.asarray(comp, np.float64), 0.0).sum())
+        st.n_slack += int(slacks.size)
+        target = self._target(st)
+        return self._decide(st, site, -1, t,
+                            st.theta + self.decay * (target - st.theta),
+                            "decay", float(slacks.mean()) if slacks.size else 0.0)
+
+    def observe_copy_slowdown(self, site: int, copy_busy: float, extra: float,
+                              frac: float, t: float) -> Optional[ThetaDecision]:
+        """Simulator feedback: the realized copy-phase slowdown of a
+        downshifted task — ``extra`` seconds over the residue-free copy,
+        ``frac`` relative (exactly known offline, EMA-estimated live)."""
+        st = self._state(site)
+        st.busy += max(float(copy_busy), 0.0)
+        if frac > self.slow_tol and extra > self._raise_budget(st):
+            return self._decide(st, site, -1, t, st.theta * self.raise_factor,
+                                "raise", float(frac))
+        return None
+
+    def reset(self) -> None:
+        self._sites.clear()
+        self.decisions.clear()

@@ -15,12 +15,14 @@ dequantization; only the per-pod representation is lossy.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.instrument import cd_all_gather
+from repro.core.instrument import (
+    AsyncCollective, cd_all_gather, cd_all_gather_async, cd_wait,
+)
 
 AxisNames = Any
 
@@ -38,6 +40,21 @@ def _dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     return q.astype(jnp.float32) * scale
 
 
+def _dequantize_sum(flat, treedef, gathered, mean: bool) -> Any:
+    """Dequantize the gathered (codes, scales) pairs and reduce in fp32."""
+    n_leaf = len(flat)
+    codes, scales = gathered[:n_leaf], gathered[n_leaf:]
+    out = []
+    for g, q_all, s_all in zip(flat, codes, scales):
+        n_shards = q_all.shape[0]
+        w = s_all.reshape((n_shards,) + (1,) * g.ndim)
+        total = jnp.sum(q_all.astype(jnp.float32) * w, axis=0)
+        if mean:
+            total = total / n_shards
+        out.append(total.astype(g.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
 def compressed_psum(grads: Any, axis: AxisNames, mean: bool = False) -> Any:
     """Sum (or mean) a gradient pytree over ``axis`` on an int8 wire.
 
@@ -51,17 +68,43 @@ def compressed_psum(grads: Any, axis: AxisNames, mean: bool = False) -> Any:
     gathered = cd_all_gather(
         [q for q, _ in qs] + [s for _, s in qs], axis, tiled=False
     )
-    n_leaf = len(flat)
-    codes, scales = gathered[:n_leaf], gathered[n_leaf:]
-    out = []
-    for g, q_all, s_all in zip(flat, codes, scales):
-        n_shards = q_all.shape[0]
-        w = s_all.reshape((n_shards,) + (1,) * g.ndim)
-        total = jnp.sum(q_all.astype(jnp.float32) * w, axis=0)
-        if mean:
-            total = total / n_shards
-        out.append(total.astype(g.dtype))
-    return jax.tree.unflatten(treedef, out)
+    return _dequantize_sum(flat, treedef, gathered, mean)
+
+
+class CompressedPsumHandle(NamedTuple):
+    """In-flight :func:`compressed_psum_start`; close with ``_wait``."""
+
+    gather: AsyncCollective
+    flat: Any
+    treedef: Any
+    mean: bool
+
+
+def compressed_psum_start(grads: Any, axis: AxisNames,
+                          mean: bool = False) -> CompressedPsumHandle:
+    """Nonblocking :func:`compressed_psum`: quantize and *dispatch* the
+    int8 gather through the async 5-phase pair (``cd_all_gather_async``).
+
+    The caller overlaps independent compute between start and
+    :func:`compressed_psum_wait` — e.g. the backward pass of the next
+    microbatch while the cross-pod DCN hop flies.  The instrumented events
+    mark that window ``dispatch_enter -> wait_enter``, so the governor
+    accounts it as busy overlap, not slack: without the taxonomy split the
+    whole flight would inflate the measured slack and invite a downshift
+    while the core is at full tilt.
+    """
+    flat, treedef = jax.tree.flatten(grads)
+    qs = [_quantize(g) for g in flat]
+    gather = cd_all_gather_async(
+        [q for q, _ in qs] + [s for _, s in qs], axis, tiled=False
+    )
+    return CompressedPsumHandle(gather, flat, treedef, mean)
+
+
+def compressed_psum_wait(handle: CompressedPsumHandle) -> Any:
+    """Block on a :func:`compressed_psum_start` and finish the reduction."""
+    gathered = cd_wait(handle.gather)
+    return _dequantize_sum(handle.flat, handle.treedef, gathered, handle.mean)
 
 
 def compression_ratio(grads: Any) -> float:

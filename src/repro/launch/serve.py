@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core.governor import Governor
+from repro.core.policies import policy_for_theta
 from repro.dist import sharding as SH
 from repro.dist.compat import set_mesh
 from repro.models import init_params
@@ -97,8 +98,9 @@ def _run_continuous(args, cfg, params, mesh, n_dev: int, mp: int) -> None:
         from repro.cluster.trace import TraceRecorder
 
         recorder = TraceRecorder(meta={"driver": "serve", "arch": args.arch,
-                                       "n_requests": args.n_requests})
-    gov = Governor(recorder=recorder)
+                                       "n_requests": args.n_requests,
+                                       "theta": args.theta or "default"})
+    gov = Governor(policy=policy_for_theta(args.theta), recorder=recorder)
     tenant = None
     if args.power_cap > 0:
         from repro.cluster.job import ServeJob
@@ -119,6 +121,10 @@ def _run_continuous(args, cfg, params, mesh, n_dev: int, mp: int) -> None:
           f"{rep.n_calls} phases, {rep.n_downshifts} downshifts, "
           f"{len(gov.actuation_log)} actuations, "
           f"energy saving {rep.energy_saving_pct:.1f}%")
+    if gov.tuner is not None:
+        per_site = {s: f"{th * 1e6:.0f}us" for s, th in gov.tuner.summary().items()}
+        print(f"[serve] theta auto: {rep.n_theta_decisions} decisions, "
+              f"final theta per site {per_site}")
     s = slo.summary()
     print(f"[serve] SLO: TTFT p95 {s['ttft']['p95'] * 1e3:.1f} ms, "
           f"TPOT p95 {s['tpot']['p95'] * 1e3:.1f} ms over "
@@ -154,6 +160,11 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--tpot-target", type=float, default=0.0,
                     help="TPOT SLO target (s); 0 disables throttling")
+    ap.add_argument("--theta", default="",
+                    help="governor timeout (continuous mode only): seconds, or "
+                         "'auto' for the online ThetaTuner (decode underfill/"
+                         "idle feed its per-site histograms); empty = the "
+                         "policy default")
     ap.add_argument("--trace-out", default="",
                     help="record the governor's event stream to this JSONL file "
                          "(continuous mode; replayable via repro.cluster.trace)")
@@ -178,6 +189,11 @@ def main() -> None:
     if mp > 1 or n > 1:
         psh = SH.serve_param_shardings(mesh, params)
         params = jax.tree.map(lambda a, s: jax.device_put(a, s), params, psh)
+
+    if not args.continuous and (args.theta or args.trace_out or args.power_cap > 0):
+        # static mode builds no governor: these flags would be silent no-ops
+        print("[serve] --theta/--trace-out/--power-cap need the continuous "
+              "engine's governor; ignored in static mode (add --continuous)")
 
     with set_mesh(mesh):
         if args.continuous:

@@ -22,6 +22,7 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.core import instrument
 from repro.core.governor import Governor
+from repro.core.policies import policy_for_theta
 from repro.dist import sharding as SH
 from repro.dist.checkpoint import CheckpointManager
 from repro.dist.compat import set_mesh
@@ -57,6 +58,10 @@ def main() -> None:
     ap.add_argument("--fail-at", type=int, default=0,
                     help="simulate a node failure at this step (fault-tolerance demo)")
     ap.add_argument("--instrument", choices=["off", "barrier", "profile"], default="off")
+    ap.add_argument("--theta", default="",
+                    help="governor timeout: seconds (e.g. 500e-6), or 'auto' for "
+                         "the online ThetaTuner (cntd_adaptive policy); empty = "
+                         "the policy default (500 us fixed)")
     ap.add_argument("--trace-out", default="",
                     help="record the governor's event stream to this JSONL file "
                          "(replayable via repro.cluster.trace; implies --instrument profile)")
@@ -79,14 +84,16 @@ def main() -> None:
         from repro.cluster.trace import TraceRecorder
 
         recorder = TraceRecorder(meta={"driver": "train", "arch": args.arch,
-                                       "steps": args.steps})
-    if (args.trace_out or args.power_cap > 0) and args.instrument != "profile":
-        # the recorder records events, the tenant polls interval snapshots:
-        # both are empty without the profile-mode event stream
-        print(f"[train] --trace-out/--power-cap need phase events: "
+                                       "steps": args.steps,
+                                       "theta": args.theta or "default"})
+    if (args.trace_out or args.power_cap > 0 or args.theta) and args.instrument != "profile":
+        # the recorder records events, the tenant polls interval snapshots,
+        # and the governor/tuner consumes them: all are empty (a silent
+        # no-op) without the profile-mode event stream
+        print(f"[train] --trace-out/--power-cap/--theta need phase events: "
               f"instrument {args.instrument!r} -> 'profile'")
         args.instrument = "profile"
-    governor = Governor(recorder=recorder)
+    governor = Governor(policy=policy_for_theta(args.theta), recorder=recorder)
     tenant = None
     if args.power_cap > 0:
         from repro.cluster.job import GovernorJob
@@ -177,8 +184,15 @@ def main() -> None:
         rep = governor.finalize()
         print(f"[governor] calls={rep.n_calls} downshifts={rep.n_downshifts} "
               f"slack={rep.total_slack:.4f}s exploited={rep.exploited_slack:.4f}s "
+              f"overlap={rep.total_overlap:.4f}s "
               f"energy_saving={rep.energy_saving_pct:.2f}% "
               f"stragglers={rep.stragglers}")
+        if governor.tuner is not None:
+            thetas = sorted(governor.tuner.summary().values())
+            print(f"[governor] theta auto: {rep.n_theta_decisions} decisions, "
+                  f"{len(thetas)} sites, theta_eff "
+                  f"{thetas[0] * 1e6:.0f}-{thetas[-1] * 1e6:.0f} us"
+                  if thetas else "[governor] theta auto: no sites observed")
     if tenant is not None:
         print(f"[power] job total: {tenant.total_energy_j:.1f}J over "
               f"{tenant.total_wall_s:.1f}s, cap commits "

@@ -21,7 +21,13 @@ with the same ``theta_eff`` timeout filter, and idle intervals book
 blocked MPI rank would.
 
 Call ids live in a private namespace (upper bit set) so meter phases can
-never collide with the instrumented-collective counter.
+never collide with the instrumented-collective counter.  Because those ids
+are minted fresh per phase, the meter also passes a *stable site* to
+``ingest_phase`` (one for underfill steps, one for idle gaps): the
+:class:`~repro.core.timeout.ThetaTuner` keys its slack histograms by site,
+so decode slack accumulates into two long-lived distributions — the same
+tuner the MPI-side collectives feed — instead of one cold histogram per
+step.
 """
 from __future__ import annotations
 
@@ -32,6 +38,10 @@ from repro.core.governor import Governor
 
 _CALL_ID_BASE = 1 << 20
 
+# stable tuner sites (see module docstring); ids count from past them
+SITE_DECODE_STEP = _CALL_ID_BASE
+SITE_IDLE_GAP = _CALL_ID_BASE + 1
+
 
 class DecodeSlackMeter:
     """Feeds decode underfill + idle gaps into a :class:`Governor`."""
@@ -39,7 +49,7 @@ class DecodeSlackMeter:
     def __init__(self, governor: Governor, rank: int = 0):
         self.governor = governor
         self.rank = rank
-        self._ids = itertools.count(_CALL_ID_BASE)
+        self._ids = itertools.count(_CALL_ID_BASE + 2)
         self.n_steps = 0
         self.n_idle = 0
         self.slot_steps_filled = 0
@@ -52,12 +62,14 @@ class DecodeSlackMeter:
         self.slot_steps_total += capacity
         underfill = 1.0 - filled / max(capacity, 1)
         t_slack_end = t0 + (t1 - t0) * underfill
-        self.governor.ingest_phase(self.rank, next(self._ids), t0, t_slack_end, t1)
+        self.governor.ingest_phase(self.rank, next(self._ids), t0, t_slack_end, t1,
+                                   site=SITE_DECODE_STEP)
 
     def idle(self, t0: float, t1: float) -> None:
         """An inter-arrival gap with zero active slots: pure slack."""
         self.n_idle += 1
-        self.governor.ingest_phase(self.rank, next(self._ids), t0, t1, t1)
+        self.governor.ingest_phase(self.rank, next(self._ids), t0, t1, t1,
+                                   site=SITE_IDLE_GAP)
 
     @property
     def fill_fraction(self) -> float:

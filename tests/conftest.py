@@ -28,3 +28,18 @@ import pytest
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_instrumentation():
+    """Instrumentation state is ambient (mode, sink, tee, call counter) and
+    leaks across tests otherwise: a sink installed by one test would keep
+    timestamping the next test's collectives, and the monotonically growing
+    call counter makes event streams order-dependent.  Reset after every
+    test (and once before, in case a previous process-level import left
+    state behind)."""
+    from repro.core import instrument
+
+    instrument.reset_instrumentation()
+    yield
+    instrument.reset_instrumentation()

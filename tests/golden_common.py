@@ -1,0 +1,105 @@
+"""Canned event streams shared by the golden conformance suite and its
+regeneration helper (``scripts/regen_goldens.py``).
+
+Three deterministic workload-shaped governor event streams, chosen to
+exercise every accounting path in ``GovernorReport.to_dict()``:
+
+* ``balanced``  — 8 near-synchronous ranks, small jitter: slack mostly under
+  theta, the timeout filter rejects almost everything.
+* ``straggler`` — 6 ranks, one 3 ms laggard: large exploitable slack on the
+  non-critical ranks, downshifts on every call.
+* ``bursty``    — 4 ranks, heavy-tailed slack, plus async 5-phase
+  occurrences (dispatch/wait: overlap accounting) and ingested single-rank
+  phases with a stable site (the serve-meter path).
+
+The streams are pure numpy (no jax) and are a function of nothing but the
+fixed seeds below — feeding one through a ``Governor`` under any policy is
+deterministic, which is what lets the fixtures pin the reports.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.governor import Governor
+from repro.core.policies import FIXED_POLICIES, Policy
+
+CANNED = ("balanced", "straggler", "bursty")
+GOLDEN_POLICY_NAMES = [p.name for p in FIXED_POLICIES]
+
+
+def _feed_balanced(gov: Governor) -> None:
+    rng = np.random.default_rng(11)
+    t = 1.0
+    for call in range(30):
+        arrivals = t + rng.uniform(0.0, 2e-4, 8)
+        release = float(arrivals.max())
+        copies = rng.uniform(0.5e-3, 1.5e-3, 8)
+        for r in range(8):
+            gov.sink(r, "barrier_enter", call, float(arrivals[r]))
+        for r in range(8):
+            gov.sink(r, "barrier_exit", call, release)
+            gov.sink(r, "copy_exit", call, release + float(copies[r]))
+        t = release + 5e-3
+
+
+def _feed_straggler(gov: Governor) -> None:
+    rng = np.random.default_rng(23)
+    t = 2.0
+    for call in range(25):
+        arrivals = t + rng.uniform(0.0, 1e-4, 6)
+        arrivals[3] = t + 3e-3                       # rank 3 always lags
+        release = float(arrivals.max())
+        for r in range(6):
+            gov.sink(r, "barrier_enter", call, float(arrivals[r]))
+        for r in range(6):
+            gov.sink(r, "barrier_exit", call, release)
+            gov.sink(r, "copy_exit", call, release + 0.8e-3)
+        t = release + 8e-3
+
+
+def _feed_bursty(gov: Governor) -> None:
+    rng = np.random.default_rng(37)
+    t = 3.0
+    for call in range(40):
+        slacks = np.exp(rng.normal(0.0, 1.5, 4)) * 1e-3
+        arrivals = t + float(slacks.max()) - slacks
+        release = t + float(slacks.max())
+        copies = rng.uniform(0.1e-3, 2e-3, 4)
+        if call % 5 == 0:
+            # async occurrence: dispatch, overlap ~2 ms of compute under the
+            # flying collective, then wait — slack starts at the wait
+            for r in range(4):
+                gov.sink(r, "dispatch_enter", call, float(arrivals[r]) - 2e-3)
+            for r in range(4):
+                gov.sink(r, "wait_enter", call, float(arrivals[r]))
+        else:
+            for r in range(4):
+                gov.sink(r, "barrier_enter", call, float(arrivals[r]))
+        for r in range(4):
+            gov.sink(r, "barrier_exit", call, release)
+            gov.sink(r, "copy_exit", call, release + float(copies[r]))
+        t = release + 6e-3
+    # serve-meter path: single-rank ingested phases with a stable site
+    for i in range(5):
+        t0 = t + i * 10e-3
+        gov.ingest_phase(0, (1 << 20) + 2 + i, t0, t0 + 3e-3, t0 + 3.5e-3,
+                         site=1 << 20)
+
+
+_FEEDERS = {
+    "balanced": _feed_balanced,
+    "straggler": _feed_straggler,
+    "bursty": _feed_bursty,
+}
+
+
+def feed(gov: Governor, kind: str) -> None:
+    _FEEDERS[kind](gov)
+
+
+def report_dict(policy: Policy, kind: str) -> dict:
+    """The frozen quantity: a fresh governor under ``policy`` fed the canned
+    ``kind`` stream, finalized, serialized."""
+    gov = Governor(policy=policy)
+    feed(gov, kind)
+    return gov.finalize().to_dict()

@@ -1,0 +1,72 @@
+"""Golden-report conformance suite.
+
+``GovernorReport.to_dict()`` for all 8 fixed-theta policies on 3 canned
+workload streams is frozen as committed JSON fixtures
+(``tests/goldens/*.json``).  Any core refactor that shifts slack, energy,
+downshift or overlap numbers fails here loudly; intentional changes are
+made by re-running ``scripts/regen_goldens.py`` and justifying the diff.
+
+Comparison is tolerance-pinned: integers and strings must match exactly,
+floats to ``REL_TOL`` (the accounting is pure float64 arithmetic on
+identical inputs, so in practice the match is bitwise on one platform; the
+tolerance absorbs libm/platform drift without letting real changes through).
+"""
+import json
+import os
+
+import pytest
+
+from golden_common import CANNED, GOLDEN_POLICY_NAMES, report_dict
+from repro.core.policies import ALL_POLICIES
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+REL_TOL = 1e-9
+ABS_TOL = 1e-12
+
+
+def _load(kind: str) -> dict:
+    with open(os.path.join(GOLDEN_DIR, f"{kind}.json")) as f:
+        return json.load(f)
+
+
+def _assert_close(got, want, path=""):
+    if isinstance(want, dict):
+        assert isinstance(got, dict), f"{path}: {type(got).__name__} != dict"
+        assert set(got) == set(want), (
+            f"{path}: keys {sorted(set(got) ^ set(want))} differ"
+        )
+        for k in want:
+            _assert_close(got[k], want[k], f"{path}.{k}")
+    elif isinstance(want, list):
+        assert isinstance(got, list) and len(got) == len(want), (
+            f"{path}: length {len(got)} != {len(want)}"
+        )
+        for i, (g, w) in enumerate(zip(got, want)):
+            _assert_close(g, w, f"{path}[{i}]")
+    elif isinstance(want, float) or isinstance(got, float):
+        assert got == pytest.approx(want, rel=REL_TOL, abs=ABS_TOL), (
+            f"{path}: {got!r} != {want!r}"
+        )
+    else:
+        assert got == want, f"{path}: {got!r} != {want!r}"
+
+
+@pytest.mark.parametrize("policy_name", GOLDEN_POLICY_NAMES)
+@pytest.mark.parametrize("kind", CANNED)
+def test_report_matches_golden(kind, policy_name):
+    fixture = _load(kind)["policies"][policy_name]
+    # JSON round-trip the live report so dict keys (straggler ranks) compare
+    # as the same type the fixture stores
+    live = json.loads(json.dumps(report_dict(ALL_POLICIES[policy_name], kind)))
+    _assert_close(live, fixture, path=f"{kind}/{policy_name}")
+
+
+@pytest.mark.parametrize("kind", CANNED)
+def test_fixture_covers_all_fixed_policies(kind):
+    """A policy added to (or renamed in) FIXED_POLICIES without regenerating
+    the fixtures is itself a conformance failure."""
+    fixture = _load(kind)
+    assert fixture["workload"] == kind
+    assert sorted(fixture["policies"]) == sorted(GOLDEN_POLICY_NAMES)
+    for name, rep in fixture["policies"].items():
+        assert rep["n_calls"] > 0, f"{kind}/{name}: empty fixture"

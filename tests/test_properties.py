@@ -137,6 +137,75 @@ def test_int8_quantization_error_bound(values):
     assert err.max() <= float(scale) * 0.5 + 1e-6
 
 
+@given(
+    st.integers(min_value=0, max_value=10_000),
+    st.floats(min_value=3e-4, max_value=3e-3),
+    st.floats(min_value=1.2, max_value=5.0),
+)
+@settings(max_examples=30, deadline=None)
+def test_energy_saving_monotone_nonincreasing_in_theta(seed, theta1, factor):
+    """Simulated end-to-end (not just coverage): for a fixed workload, a
+    longer timeout can never save MORE energy — energy(theta) is
+    non-decreasing in theta for the reactive slack-scope policy."""
+    rng = np.random.default_rng(seed)
+    n_tasks, n_ranks = 12, 6
+    comp = rng.uniform(1e-4, 8e-3, (n_tasks, n_ranks))
+    copy = rng.uniform(0.0, 2e-3, n_tasks)
+    wl = _workload(comp, copy, n_ranks, n_tasks, np.zeros(n_tasks, bool), seed)
+    e1 = simulate(wl, Policy("t1", comm_mode="timeout", comm_scope="slack",
+                             theta=theta1))[0].energy
+    e2 = simulate(wl, Policy("t2", comm_mode="timeout", comm_scope="slack",
+                             theta=theta1 * factor))[0].energy
+    assert e2 >= e1 - 1e-12
+
+
+@given(workloads)
+@settings(max_examples=40, deadline=None)
+def test_slack_scope_never_slows_copy(args):
+    """The paper's isolation contract: with the artificial barrier, the
+    timeout applies to the barrier-isolated slack ONLY — for memory-bound
+    copies (beta_copy=0, where frequency cannot change duration) the copy
+    phase must be bit-identical to baseline, at any theta."""
+    seed, n_ranks, n_tasks = args
+    rng = np.random.default_rng(seed)
+    comp = rng.uniform(1e-4, 8e-3, (n_tasks, n_ranks))
+    copy = rng.uniform(0.1e-3, 3e-3, n_tasks)
+    p2p = rng.random(n_tasks) < 0.3
+    wl = _workload(comp, copy, n_ranks, n_tasks, p2p, seed)
+    base, _ = simulate(wl, BASELINE)
+    for theta in (100e-6, 500e-6, 2e-3):
+        res, _ = simulate(wl, Policy("s", comm_mode="timeout",
+                                     comm_scope="slack", theta=theta))
+        assert res.tcopy == base.tcopy
+
+
+@given(
+    st.integers(min_value=0, max_value=10_000),
+    st.floats(min_value=1e-5, max_value=1e-1),     # theta0 (possibly absurd)
+    st.floats(min_value=1e-3, max_value=1e-1),     # theta_max
+)
+@settings(max_examples=40, deadline=None)
+def test_tuner_theta_always_within_hw_bounds(seed, theta0, theta_max):
+    """theta_eff stays inside [switch_latency/2, theta_max] after every
+    observation, whatever slack/copy stream (incl. AIMD raises) arrives."""
+    from repro.core.pstate import DEFAULT_HW
+    from repro.core.timeout import ThetaTuner
+
+    lo, hi = DEFAULT_HW.theta_bounds(theta_max)
+    tuner = ThetaTuner(theta0=theta0, theta_max=theta_max)
+    rng = np.random.default_rng(seed)
+    for i in range(60):
+        site = int(rng.integers(0, 3))
+        tuner.observe_slack(site, float(rng.lognormal(-7, 2.5)), t=float(i),
+                            comp=float(rng.uniform(0, 30e-3)))
+        tuner.observe_copy(site, float(rng.lognormal(-8, 2.0)), t=float(i),
+                           downshifted=bool(rng.random() < 0.5))
+        for s in range(3):
+            assert lo <= tuner.theta_for(s) <= hi
+    for dec in tuner.decisions:
+        assert lo <= dec.theta_after <= hi
+
+
 @given(st.integers(min_value=0, max_value=10_000))
 @settings(max_examples=20, deadline=None)
 def test_checkpoint_roundtrip(seed):
