@@ -41,7 +41,7 @@ def main() -> None:
     governor = Governor(policy=COUNTDOWN_SLACK)
     instrument.set_mode("profile")
     instrument.enable_events(True)          # fully-manual mesh: events legal
-    instrument.set_event_sink(governor.sink)
+    instrument.get_event_bus().subscribe(governor)
 
     def per_device_step(params, opt, batch):
         # Tcomp: local forward/backward -- then the instrumented collective:
@@ -105,7 +105,7 @@ def main() -> None:
 
     instrument.set_mode("off")
     instrument.enable_events(False)
-    instrument.set_event_sink(None)
+    instrument.get_event_bus().unsubscribe(governor)
 
 
 if __name__ == "__main__":

@@ -38,12 +38,20 @@ class JobSample:
     ``exploited_ratio`` comes from ``Governor.interval_snapshot()`` (live
     jobs) or ``SimResult.exploited / rank-time`` (simulated jobs);
     ``power_w`` is the measured average draw over the epoch.
+    ``overlap_ratio`` (dispatch->wait compute hidden under flying
+    collectives, per rank-second) separates an overlap-heavy job — whose
+    in-barrier time is busy compute that converts watts to progress —
+    from a slack-heavy one whose watts are stranded.  Telemetry today:
+    ``exploited_ratio`` already excludes overlap (the governor never books
+    it as slack), so allocation is overlap-honest; the explicit ratio
+    lets operators and future policies see the split directly.
     """
 
     job_id: str
     power_w: float
     exploited_ratio: float
     done: bool = False
+    overlap_ratio: float = 0.0
 
 
 @dataclass

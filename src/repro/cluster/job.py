@@ -45,6 +45,7 @@ class EpochReport:
     exploited_ratio: float       # f_min time / (n_ranks * wall_s)
     n_calls: int
     done: bool
+    overlap_ratio: float = 0.0   # dispatch->wait overlap / (n_ranks * wall_s)
 
 
 class ManagedJob:
@@ -69,7 +70,8 @@ class ManagedJob:
         if not self.reports:
             return JobSample(self.job_id, 0.0, 0.0)
         r = self.reports[-1]
-        return JobSample(self.job_id, r.power_w, r.exploited_ratio, done=r.done)
+        return JobSample(self.job_id, r.power_w, r.exploited_ratio, done=r.done,
+                         overlap_ratio=r.overlap_ratio)
 
     def _book(self, rep: EpochReport) -> EpochReport:
         self.reports.append(rep)
@@ -120,13 +122,14 @@ class SimJob(ManagedJob):
         res, _ = simulate(self._chunk(k0, k1), self.policy, self.hw,
                           power_cap=cap)
         self._t += res.time
-        ratio = res.exploited / max(self.n_ranks * res.time, 1e-30)
+        rank_s = max(self.n_ranks * res.time, 1e-30)
         return self._book(EpochReport(
             job_id=self.job_id, epoch=len(self.reports), cap_w=cap,
             wall_s=res.time, energy_j=res.energy,
             power_w=res.energy / max(res.time, 1e-30),
-            exploited_ratio=ratio, n_calls=res.calls,
+            exploited_ratio=res.exploited / rank_s, n_calls=res.calls,
             done=self._cursor >= self.workload.n_tasks,
+            overlap_ratio=res.toverlap / rank_s,
         ))
 
 
@@ -171,6 +174,9 @@ class GovernorJob(ManagedJob):
             power_w=float(energy) / dt,
             exploited_ratio=exploited / rank_s, n_calls=stats.n_calls,
             done=self.finished,
+            # IntervalStats now carries the overlap term instead of
+            # discarding it: overlap-heavy != slack-heavy to the arbiter
+            overlap_ratio=min(stats.overlap, rank_s) / rank_s,
         ))
 
 

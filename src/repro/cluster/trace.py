@@ -39,6 +39,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.events import EventBus, PhaseRecord
 from repro.core.governor import Actuation, Governor, GovernorReport
 from repro.core.policies import COUNTDOWN_SLACK, Policy
 from repro.core.pstate import DEFAULT_HW, HwModel
@@ -52,9 +53,12 @@ SUPPORTED_VERSIONS = (1, 2)
 class TraceRecorder:
     """Ring-buffered, versioned capture of a governor's event stream.
 
-    Attach via ``Governor(recorder=rec)`` (captures sink events, ingested
-    phases, and actuations) or ``instrument.set_event_tee(rec.on_event)``
-    (sink-less capture of the raw collective events).
+    Speaks the canonical :mod:`repro.core.events` subscriber protocol
+    (``on_event``/``on_phase``), so it attaches anywhere in the pipeline:
+    via ``Governor(recorder=rec)`` (captures sink events, ingested phases,
+    actuations, and tuner decisions) or directly on the instrument bus —
+    ``instrument.get_event_bus().subscribe(rec)`` — for sink-less capture
+    of the raw collective events.
     """
 
     def __init__(self, capacity: int = 1_000_000, meta: Optional[Dict] = None):
@@ -63,17 +67,17 @@ class TraceRecorder:
         self.meta = dict(meta or {})
         self.n_seen = 0
 
-    # ---- capture hooks (the Governor's recorder interface) ---------------
+    # ---- capture hooks (the events.py subscriber protocol) ---------------
     def on_event(self, rank: int, phase: str, call_id: int, t: float) -> None:
         self._append({"k": "ev", "rank": int(rank), "phase": phase,
                       "call": int(call_id), "t": float(t)})
 
-    def on_phase(self, rank: int, call_id: int, t0: float, t1: float, t2: float,
-                 site: Optional[int] = None) -> None:
-        rec = {"k": "phase", "rank": int(rank), "call": int(call_id),
-               "t0": float(t0), "t1": float(t1), "t2": float(t2)}
-        if site is not None:
-            rec["site"] = int(site)
+    def on_phase(self, record: PhaseRecord) -> None:
+        rec = {"k": "phase", "rank": int(record.rank), "call": int(record.call_id),
+               "t0": float(record.t_enter), "t1": float(record.t_slack_end),
+               "t2": float(record.t_copy_end)}
+        if record.site is not None:
+            rec["site"] = int(record.site)
         self._append(rec)
 
     def on_actuation(self, act: Actuation) -> None:
@@ -161,12 +165,17 @@ def replay(
                          "provided governor already carries its tuner")
     gov = governor if governor is not None else Governor(policy=policy, hw=hw,
                                                          tuner=tuner)
+    # a private bus with the governor subscribed: replay is just another
+    # producer of the canonical stream (identical to the live path, so the
+    # reproduced report is bit-for-bit)
+    bus = EventBus()
+    bus.subscribe(gov)
     for r in records:
         if r["k"] == "ev":
-            gov.sink(r["rank"], r["phase"], r["call"], r["t"])
+            bus.publish(r["rank"], r["phase"], r["call"], r["t"])
         elif r["k"] == "phase":
-            gov.ingest_phase(r["rank"], r["call"], r["t0"], r["t1"], r["t2"],
-                             site=r.get("site"))
+            bus.publish_phase(PhaseRecord(r["rank"], r["call"], r["t0"],
+                                          r["t1"], r["t2"], r.get("site")))
     return gov, gov.finalize()
 
 

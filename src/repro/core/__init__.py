@@ -10,6 +10,11 @@ cheap for tooling — ``instrument`` in particular pulls in jax.
 import importlib
 
 _EXPORTS = {
+    # canonical event vocabulary + bus (pure python, jax-free)
+    "EventBus": "repro.core.events",
+    "PHASE_NAMES": "repro.core.events",
+    "PhaseEvent": "repro.core.events",
+    "PhaseRecord": "repro.core.events",
     # governor pipeline
     "Actuation": "repro.core.governor",
     "Governor": "repro.core.governor",
@@ -17,6 +22,7 @@ _EXPORTS = {
     "IntervalStats": "repro.core.governor",
     # instrument mode helpers (jax-bearing; loaded on first touch)
     "AsyncCollective": "repro.core.instrument",
+    "get_event_bus": "repro.core.instrument",
     "cd_all_gather": "repro.core.instrument",
     "cd_all_gather_async": "repro.core.instrument",
     "cd_pmean": "repro.core.instrument",
@@ -58,7 +64,7 @@ _EXPORTS = {
 }
 
 _SUBMODULES = (
-    "governor", "instrument", "policies", "predictor", "profiler",
+    "events", "governor", "instrument", "policies", "predictor", "profiler",
     "pstate", "simulator", "timeout", "workloads",
 )
 

@@ -1,0 +1,203 @@
+"""Canonical phase-event vocabulary and the one event bus every producer
+and consumer shares.
+
+Phase semantics used to live in four places at once: ``instrument``'s
+ambient ``_SINK``/``_TEE`` globals (one consumer slot each), the
+governor's ``ingest_phase`` kwargs, ``cluster.trace``'s JSONL record
+shapes, and ad-hoc synthetic feeders.  This module is now the single
+home:
+
+* :class:`PhaseEvent` — one timestamped event of the 5-phase taxonomy
+  (``barrier_enter``/``barrier_exit``/``copy_exit`` for blocking
+  collectives, plus ``dispatch_enter``/``wait_enter`` for the async
+  start/wait pairs).  On the hot path events travel as positional args,
+  not objects — the NamedTuple exists for storage and tests.
+* :class:`PhaseRecord` — one *fully-formed* single-rank phase from a
+  producer that knows the whole span at once (serve decode underfill,
+  idle gaps, trace replay): enter / slack-end / copy-end timestamps plus
+  an optional stable ``site`` for the theta tuner's histograms.
+* :class:`EventBus` — N registered subscribers fed the identical stream.
+  A subscriber is any object with ``on_event(rank, phase, call_id, t)``
+  and/or ``on_phase(record)`` methods (a bare callable subscribes as an
+  ``on_event`` consumer).  The bus replaces the single-slot sink/tee
+  globals: the governor, a :class:`~repro.cluster.trace.TraceRecorder`,
+  a straggler probe and any future consumer attach side by side.
+
+The module is deliberately jax-free so ``import repro.core.events`` stays
+cheap for host-side tooling (recorders, replayers, benchmarks).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
+
+# the 5-phase event taxonomy (codes are what crosses the io_callback wire)
+PHASE_NAMES = {
+    0: "barrier_enter",      # blocking call entered; slack starts
+    1: "barrier_exit",       # artificial barrier resolved; slack ends
+    2: "copy_exit",          # real collective done; copy ends
+    3: "dispatch_enter",     # async collective dispatched; overlap starts
+    4: "wait_enter",         # caller blocks on the async handle; slack starts
+}
+PHASE_CODES = {name: code for code, name in PHASE_NAMES.items()}
+
+
+class PhaseEvent(NamedTuple):
+    """One timestamped phase event, as a value (storage/testing shape; the
+    bus hot path passes the same four fields positionally)."""
+
+    rank: int
+    phase: str               # one of PHASE_NAMES.values()
+    call_id: int
+    t: float                 # host-side monotonic seconds
+
+
+class PhaseRecord(NamedTuple):
+    """One fully-formed single-rank phase from a non-streaming producer.
+
+    ``t_enter <= t_slack_end <= t_copy_end``; ``site`` keys the theta
+    tuner's per-callsite histogram when the producer mints a fresh
+    ``call_id`` per phase (serve meters do) — without it every phase
+    would start a cold histogram.
+    """
+
+    rank: int
+    call_id: int
+    t_enter: float
+    t_slack_end: float
+    t_copy_end: float
+    site: Optional[int] = None
+
+
+class _Entry(NamedTuple):
+    name: Optional[str]
+    subscriber: Any
+    ident: Any               # stable identity key (bound methods resolve to
+    # (owner id, function id): every attribute access mints a fresh bound-
+    # method object, so `is` comparisons would silently never match)
+    on_event: Optional[Callable[[int, str, int, float], None]]
+    on_phase: Optional[Callable[[PhaseRecord], None]]
+
+
+def _ident(subscriber: Any) -> Any:
+    owner = getattr(subscriber, "__self__", None)
+    func = getattr(subscriber, "__func__", None)
+    if owner is not None and func is not None:
+        return ("bound", id(owner), id(func))
+    return id(subscriber)
+
+
+class EventBus:
+    """Fan one (rank, phase, call_id, t) / :class:`PhaseRecord` stream out
+    to N subscribers, in subscription order.
+
+    Subscription management takes a lock; ``publish``/``publish_phase``
+    iterate an immutable snapshot tuple, so the hot path is a plain loop
+    over bound methods with no locking of its own (per-subscriber
+    consumers do their own locking — the governor does).
+    """
+
+    __slots__ = ("_entries", "_lock", "_event_cbs", "_phase_cbs")
+
+    def __init__(self) -> None:
+        self._entries: List[_Entry] = []
+        self._lock = threading.Lock()
+        self._event_cbs: Tuple[Callable, ...] = ()
+        self._phase_cbs: Tuple[Callable, ...] = ()
+
+    # ---- subscription management -----------------------------------------
+    def _rebuild(self) -> None:
+        self._event_cbs = tuple(e.on_event for e in self._entries
+                                if e.on_event is not None)
+        self._phase_cbs = tuple(e.on_phase for e in self._entries
+                                if e.on_phase is not None)
+
+    @staticmethod
+    def _resolve(subscriber: Any) -> Tuple[Optional[Callable], Optional[Callable]]:
+        on_event = getattr(subscriber, "on_event", None)
+        on_phase = getattr(subscriber, "on_phase", None)
+        if on_event is None and on_phase is None:
+            if callable(subscriber):
+                return subscriber, None
+            raise TypeError(
+                f"not a subscriber: {subscriber!r} has neither on_event nor "
+                f"on_phase and is not callable"
+            )
+        return on_event, on_phase
+
+    def subscribe(self, subscriber: Any, *, name: Optional[str] = None) -> Any:
+        """Register ``subscriber``; returns it (decorator-friendly).
+
+        ``name`` creates a *named slot*: a later subscribe with the same
+        name replaces the previous occupant and only it (the legacy
+        single-slot ``set_event_sink``/``set_event_tee`` semantics ride on
+        this — one callable may occupy both slots, and is then delivered
+        twice, exactly as the two globals used to).  An *unnamed*
+        re-subscribe of the same subscriber — object or bound method —
+        replaces its previous unnamed entry rather than duplicating it.
+        """
+        on_event, on_phase = self._resolve(subscriber)
+        ident = _ident(subscriber)
+        with self._lock:
+            if name is not None:
+                self._entries = [e for e in self._entries if e.name != name]
+            else:
+                self._entries = [
+                    e for e in self._entries
+                    if e.name is not None or e.ident != ident
+                ]
+            self._entries.append(_Entry(name, subscriber, ident,
+                                        on_event, on_phase))
+            self._rebuild()
+        return subscriber
+
+    def unsubscribe(self, target: Any) -> bool:
+        """Remove by subscriber identity (object or bound method — every
+        entry it occupies, named or not) or by slot name; True if found.
+        ``None`` is a no-op (it would otherwise match every unnamed
+        entry's ``name``)."""
+        if target is None:
+            return False
+        ident = _ident(target)
+        with self._lock:
+            before = len(self._entries)
+            self._entries = [
+                e for e in self._entries
+                if e.ident != ident and e.name != target
+            ]
+            if len(self._entries) != before:
+                self._rebuild()
+                return True
+            return False
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries = []
+            self._rebuild()
+
+    def subscribers(self) -> List[Any]:
+        return [e.subscriber for e in self._entries]
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __bool__(self) -> bool:
+        # truthiness == "anyone listening?" so producers can skip the
+        # timestamp + publish entirely when nobody subscribed
+        return bool(self._entries)
+
+    # ---- publishing (hot path) -------------------------------------------
+    def publish(self, rank: int, phase: str, call_id: int, t: float) -> None:
+        """Fan one streamed event out to every on_event subscriber."""
+        for cb in self._event_cbs:
+            cb(rank, phase, call_id, t)
+
+    def publish_event(self, event: PhaseEvent) -> None:
+        """Value-shaped convenience over :meth:`publish`."""
+        for cb in self._event_cbs:
+            cb(event.rank, event.phase, event.call_id, event.t)
+
+    def publish_phase(self, record: PhaseRecord) -> None:
+        """Fan one fully-formed phase out to every on_phase subscriber."""
+        for cb in self._phase_cbs:
+            cb(record)

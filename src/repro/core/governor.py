@@ -1,39 +1,57 @@
-"""Host-side governor: the live runtime that consumes phase events.
+"""Host-side governor: the live streaming engine that consumes phase events.
 
 This is the analogue of the paper's timer+callback machinery (§4.3): the
-instrumented collectives emit (rank, phase, call_id, t) events through
-``repro.core.instrument.set_event_sink``; the governor reconstructs per-call
-slack/copy durations, applies the configured policy's timeout decision, logs
-the P-state actuation it *would* issue (on Intel: wrmsr via MSR_SAFE; on a
+instrumented collectives emit (rank, phase, call_id, t) events onto the
+:class:`~repro.core.events.EventBus` (``repro.core.instrument`` owns the
+ambient bus); the governor subscribes, reconstructs per-call slack/copy
+durations, applies the configured policy's timeout decision, logs the
+P-state actuation it *would* issue (on Intel: wrmsr via MSR_SAFE; on a
 TPU host: SMC power capping — see DESIGN.md §2), estimates energy via the
 calibrated HwModel, and feeds the straggler detector.
 
-Two consumers added for the cluster layer (DESIGN.md §7) hang off the same
-event stream: an optional :class:`~repro.cluster.trace.TraceRecorder` tees
-every event/phase/actuation the governor books (so a run can be replayed
-offline, bit-for-bit), and :meth:`Governor.interval_snapshot` reports the
-slack/energy booked since the previous snapshot — the per-epoch
-exploited-slack ratio the :class:`~repro.cluster.arbiter.PowerBudgetArbiter`
-redistributes watts on.
+The accounting is **streaming and constant-memory** (DESIGN.md §9): the
+runtime lives inside every MPI call on week-long runs, so it cannot
+retain history.  Slack/copy/overlap/energy accumulate incrementally when
+a call occurrence *retires* (a rank re-enters its call id — the rotation
+rule — or an ingested phase closes); retired records are evicted into a
+small bounded ring (``retention``, debugging only), the straggler
+detector observes arrivals at retirement, and :meth:`finalize` /
+:meth:`interval_snapshot` are O(in-flight) / O(1) reads of the
+accumulators instead of re-walking the full history.  The accumulation
+order is exactly the retirement order followed by the in-flight records,
+i.e. the same float-addition sequence the historical batch tally
+performed — reports are bit-for-bit identical (the golden conformance
+suite and the streaming/batch property test in ``tests/test_events.py``
+pin this down).
+
+Consumers that hang off the same stream: an optional
+:class:`~repro.cluster.trace.TraceRecorder` (``Governor(recorder=)``)
+tees every event/phase/actuation the governor books so a run replays
+offline bit-for-bit, and :meth:`interval_snapshot` reports the
+slack/overlap/energy booked since the previous snapshot — the per-epoch
+poll the :class:`~repro.cluster.arbiter.PowerBudgetArbiter` redistributes
+watts on.
 
 An optional :class:`~repro.core.timeout.ThetaTuner` (``Governor(tuner=)``,
 auto-created for ``theta_mode="adaptive"`` policies) closes the timeout
 feedback loop: each barrier_exit is priced against the tuner's per-site
 theta instead of the policy constant, the observation feeds the site's
 slack histogram, and every adjustment is logged as a structured
-:class:`~repro.core.timeout.ThetaDecision` next to the actuations (and into
-the trace, schema v2, so adaptive runs replay bit-for-bit).  The 5-phase
-taxonomy (``dispatch_enter``/``wait_enter`` from the async collectives)
-books compute/communication overlap as *non-slack*: slack for an async
-pair starts at the wait, and the overlap window is reported separately on
-``GovernorReport.total_overlap``.
+:class:`~repro.core.timeout.ThetaDecision` next to the actuations (and
+into the trace, schema v2, so adaptive runs replay bit-for-bit).  The
+5-phase taxonomy (``dispatch_enter``/``wait_enter`` from the async
+collectives) books compute/communication overlap as *non-slack*: slack
+for an async pair starts at the wait, and the overlap window is reported
+separately on ``GovernorReport.total_overlap``.
 """
 from __future__ import annotations
 
+import collections
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
+from repro.core.events import PhaseRecord
 from repro.core.policies import COUNTDOWN_SLACK, Policy
 from repro.core.pstate import DEFAULT_HW, HwModel
 from repro.core.timeout import ThetaDecision, ThetaTuner
@@ -52,16 +70,65 @@ class Actuation(NamedTuple):
     slack: float             # the slack duration that triggered the pair
 
 
-@dataclass
 class CallRecord:
-    call_id: int
-    enter: Dict[int, float] = field(default_factory=dict)       # rank -> t (slack start)
-    slack_end: Dict[int, float] = field(default_factory=dict)
-    copy_end: Dict[int, float] = field(default_factory=dict)
-    dispatch: Dict[int, float] = field(default_factory=dict)    # async overlap start
-    theta_used: Dict[int, float] = field(default_factory=dict)  # raw theta armed per
-    # rank at slack end (pricing derives theta_eff from it via HwModel)
-    site: Optional[int] = None   # tuner histogram key override (ingested phases)
+    """Per-occurrence reconstruction state (one barrier/async pair).
+
+    A plain ``__slots__`` class, not a dataclass: one instance is created
+    per *occurrence* on the hot path and its construction cost is part of
+    the per-event budget.
+    """
+
+    __slots__ = ("call_id", "enter", "slack_end", "copy_end", "dispatch",
+                 "theta_used", "site", "observed")
+
+    def __init__(self, call_id: int, site: Optional[int] = None):
+        self.call_id = call_id
+        self.enter: Dict[int, float] = {}       # rank -> t (slack start)
+        self.slack_end: Dict[int, float] = {}
+        self.copy_end: Dict[int, float] = {}
+        self.dispatch: Dict[int, float] = {}    # async overlap start
+        self.theta_used: Dict[int, float] = {}  # raw theta armed per rank at
+        # slack end (only populated under a tuner; fixed policies price the
+        # constant default, saving a dict store per event)
+        self.site = site                        # tuner histogram key override
+        self.observed = 0                       # arrival count already fed to
+        # the straggler detector (a mid-run finalize() observes the record
+        # partially; more ranks entering later re-qualify it)
+
+    def __repr__(self) -> str:   # debugging aid for ring inspection
+        return (f"CallRecord(call_id={self.call_id}, ranks={len(self.enter)}, "
+                f"site={self.site})")
+
+
+class _Accum:
+    """Streaming counters behind reports and snapshots.
+
+    ``add_record`` replays the historical batch tally's inner loop against
+    *running* sums — feeding records through in the same order as the old
+    one-shot walk performs the identical float-addition sequence, which is
+    what keeps the golden fixtures bit-for-bit stable across the
+    streaming refactor.
+    """
+
+    __slots__ = ("n_records", "n_down", "slack", "copy", "busy",
+                 "exploited", "e_base", "e_pol", "overlap")
+
+    def __init__(self) -> None:
+        self.n_records = 0
+        self.n_down = 0
+        self.slack = 0.0
+        self.copy = 0.0
+        self.busy = 0.0
+        self.exploited = 0.0
+        self.e_base = 0.0
+        self.e_pol = 0.0
+        self.overlap = 0.0
+
+    def clone(self) -> "_Accum":
+        c = _Accum()
+        for f in _Accum.__slots__:
+            setattr(c, f, getattr(self, f))
+        return c
 
 
 @dataclass
@@ -118,6 +185,7 @@ class IntervalStats:
     exploited: float
     energy_baseline: float
     energy_policy: float
+    overlap: float = 0.0             # dispatch->wait seconds booked non-slack
 
     @property
     def exploited_ratio(self) -> float:
@@ -125,9 +193,28 @@ class IntervalStats:
         the arbiter's signal that this job has watts to give away."""
         return self.exploited / self.busy if self.busy > 0 else 0.0
 
+    @property
+    def overlap_ratio(self) -> float:
+        """Overlap seconds per instrumented busy second — distinguishes an
+        overlap-heavy job (compute hidden under flying collectives: watts
+        convert to progress) from a slack-heavy one (watts stranded)."""
+        return self.overlap / self.busy if self.busy > 0 else 0.0
+
 
 class Governor:
-    """Reconstructs phases from instrument events and applies the policy."""
+    """Streaming engine: reconstructs phases from bus events, applies the
+    policy, and keeps O(1)-memory accounting.
+
+    Subscribe it to an :class:`~repro.core.events.EventBus` (it exposes the
+    canonical ``on_event``/``on_phase`` consumer interface) or feed it
+    directly through :meth:`sink` / :meth:`ingest_phase`.
+
+    ``retention`` bounds the debugging ring of retired
+    :class:`CallRecord` occurrences (``recent_records()``); accounting
+    never needs them back.  ``log_retention`` optionally bounds the
+    actuation/theta decision logs the same way — counts survive eviction
+    (``n_actuations``, and ``n_theta_decisions`` on the report).
+    """
 
     def __init__(
         self,
@@ -136,6 +223,8 @@ class Governor:
         detector: Optional[StragglerDetector] = None,
         recorder=None,
         tuner: Optional[ThetaTuner] = None,
+        retention: int = 256,
+        log_retention: Optional[int] = None,
     ):
         self.policy = policy
         self.hw = hw
@@ -144,34 +233,101 @@ class Governor:
         if tuner is None and policy.theta_mode == "adaptive":
             tuner = ThetaTuner(hw=hw, theta0=policy.theta)
         self.tuner = tuner
+        self.retention = int(retention)
         # call_ids are assigned at TRACE time, so the same id recurs on every
-        # executed step: rotate to a fresh occurrence when a rank re-enters
+        # executed step: rotate to a fresh occurrence when a rank re-enters,
+        # retiring the previous one into the accumulators + ring
         self._calls: Dict[int, CallRecord] = {}
-        self._done: List[CallRecord] = []
-        self._mark = 0               # interval_snapshot high-water mark
+        self._ring: collections.deque = collections.deque(maxlen=self.retention)
+        self._acc = _Accum()         # cumulative, behind finalize()
+        self._mark = _Accum()        # checkpoint of _acc at the last snapshot
         self._last_end: Dict[int, float] = {}   # rank -> last phase end (the
         # enter-minus-this gap is the rank's compute, widening the tuner's
         # overhead budget to the time-to-completion denominator)
         self._lock = threading.Lock()
-        self.actuation_log: List[Actuation] = []
-        self.theta_log: List[ThetaDecision] = []
+        self.n_actuations = 0
+        # the log materializes lazily: the hot path appends one compact
+        # (t, rank, call_id, slack) spine tuple per pair and the
+        # ``actuation_log`` property expands it on first read (eagerly only
+        # under a recorder, which needs the pair in stream order).  Under
+        # log_retention the spine is ring-bounded too — each entry expands
+        # to a pair, so half the retention covers the whole window and an
+        # unread governor stays bounded-RSS on week-long runs
+        self._act_raw = (
+            collections.deque(maxlen=(log_retention + 1) // 2)
+            if log_retention is not None else []
+        )
+        self._act_log: List[Actuation] = (
+            collections.deque(maxlen=log_retention) if log_retention is not None
+            else []
+        )
+        self._n_theta = 0
+        self._theta_log = (
+            collections.deque(maxlen=log_retention) if log_retention is not None
+            else []
+        )
+        # policy/hw are frozen for the governor's lifetime: pre-derive the
+        # per-event constants off the hot path
+        self._theta_default = policy.theta
+        self._timeout_armed = policy.comm_mode in ("timeout", "predict_timeout")
+        self._scope_comm = policy.comm_scope == "comm"
+        # float() strips the numpy scalar wrapper: identical IEEE doubles,
+        # faster accumulate arithmetic
+        self._w_slack_hi = float(hw.watts(hw.f_max, hw.act_slack))
+        self._w_slack_lo = float(hw.watts(hw.f_min, hw.act_slack))
+        self._w_copy_hi = float(hw.watts(hw.f_max, hw.act_copy))
+        self._w_copy_lo = float(hw.watts(hw.f_min, hw.act_copy))
+        self._theta_eff: Dict[float, float] = {}     # theta -> hw.theta_eff
 
     def _actuate(self, t: float, rank: int, call_id: int, slack: float) -> None:
+        self.n_actuations += 2
+        if self.recorder is None:
+            self._act_raw.append((t, rank, call_id, slack))
+            return
         pair = (
             Actuation(t, rank, "set_pstate_min", call_id, slack),
             Actuation(t, rank, "restore_pstate_max", call_id, slack),
         )
-        self.actuation_log.extend(pair)
-        if self.recorder is not None:
-            for act in pair:
-                self.recorder.on_actuation(act)
+        self._act_log.extend(pair)
+        for act in pair:
+            self.recorder.on_actuation(act)
+
+    @property
+    def actuation_log(self) -> List[Actuation]:
+        """Every P-state pair booked so far (cold read: pending spine
+        tuples are expanded into :class:`Actuation` values on access).
+
+        Always a ``list``: the live backing list when unbounded, a snapshot
+        copy of the retention ring under ``log_retention`` (a deque would
+        compare unequal to a replayed governor's list even element-for-
+        element identical).
+        """
+        raw = self._act_raw
+        if raw:
+            with self._lock:
+                log = self._act_log
+                for t, rank, call_id, slack in raw:
+                    log.append(Actuation(t, rank, "set_pstate_min", call_id, slack))
+                    log.append(Actuation(t, rank, "restore_pstate_max", call_id, slack))
+                raw.clear()
+        log = self._act_log
+        return log if type(log) is list else list(log)
 
     def _record_theta(self, dec: Optional[ThetaDecision]) -> None:
         if dec is None:
             return
-        self.theta_log.append(dec)
+        self._n_theta += 1
+        self._theta_log.append(dec)
         if self.recorder is not None and hasattr(self.recorder, "on_theta"):
             self.recorder.on_theta(dec)
+
+    @property
+    def theta_log(self) -> List[ThetaDecision]:
+        """Tuner decisions booked so far — always a ``list`` (a snapshot
+        copy of the retention ring under ``log_retention``), mirroring
+        :attr:`actuation_log` so cross-governor comparisons stay honest."""
+        log = self._theta_log
+        return log if type(log) is list else list(log)
 
     def _close_slack(self, rec: CallRecord, rank: int, t: float) -> None:
         """Shared barrier_exit tail: price the slack against the (possibly
@@ -179,18 +335,19 @@ class Governor:
         rec.slack_end[rank] = t
         t0 = rec.enter.get(rank, t)
         slack = t - t0
-        key = rec.site if rec.site is not None else rec.call_id
-        theta = self.policy.theta
-        if self.tuner is not None:
+        if self.tuner is None:
+            theta = self._theta_default
+        else:
+            key = rec.site if rec.site is not None else rec.call_id
             theta = self.tuner.theta_for(key)   # threshold armed BEFORE this obs
-        rec.theta_used[rank] = theta
-        if self.tuner is not None:
-            comp = max(t0 - self._last_end[rank], 0.0) if rank in self._last_end else 0.0
+            rec.theta_used[rank] = theta
+            last = self._last_end.get(rank)
+            comp = max(t0 - last, 0.0) if last is not None else 0.0
             self._record_theta(
                 self.tuner.observe_slack(key, slack, t, rank=rank, comp=comp)
             )
         self._last_end[rank] = t
-        if slack >= theta and self.policy.comm_mode in ("timeout", "predict_timeout"):
+        if slack >= theta and self._timeout_armed:
             self._actuate(t, rank, rec.call_id, slack)
 
     def _close_copy(self, rec: CallRecord, rank: int, t: float) -> None:
@@ -200,36 +357,172 @@ class Governor:
             return
         t1 = rec.slack_end[rank]
         slack = t1 - rec.enter.get(rank, t1)
-        downshifted = slack >= rec.theta_used.get(rank, self.policy.theta)
+        downshifted = slack >= rec.theta_used.get(rank, self._theta_default)
         key = rec.site if rec.site is not None else rec.call_id
         self._record_theta(
             self.tuner.observe_copy(key, t - t1, t, rank=rank, downshifted=downshifted)
         )
 
-    # the instrument event sink ------------------------------------------------
+    # streaming accounting ----------------------------------------------------
+    def _accumulate(self, rec: CallRecord, acc: _Accum) -> None:
+        """Fold one record into running sums — the historical batch tally's
+        inner loop, verbatim in addition order, against persistent
+        accumulators (the sums ride in locals across the rank loop; same
+        float sequence, one attribute write per field per record)."""
+        acc.n_records += 1
+        enter = rec.enter
+        if not enter:
+            return
+        slack_end = rec.slack_end
+        copy_end = rec.copy_end
+        dispatch = rec.dispatch
+        theta_used = rec.theta_used
+        theta_eff_of = self._theta_eff
+        default_theta = self._theta_default
+        # fixed-theta records (no tuner) price one threshold: hoist the
+        # two per-rank dict lookups out of the loop
+        te_fixed = None
+        if not theta_used:
+            te_fixed = theta_eff_of.get(default_theta)
+            if te_fixed is None:
+                te_fixed = self.hw.theta_eff(default_theta)
+                theta_eff_of[default_theta] = te_fixed
+        w_slack_hi, w_slack_lo = self._w_slack_hi, self._w_slack_lo
+        w_copy_hi, w_copy_lo = self._w_copy_hi, self._w_copy_lo
+        scope_comm = self._scope_comm
+        n_down = acc.n_down
+        a_slack, a_copy, a_busy = acc.slack, acc.copy, acc.busy
+        a_expl, a_ebase, a_epol, a_ov = (acc.exploited, acc.e_base,
+                                         acc.e_pol, acc.overlap)
+        for rank, t0 in enter.items():
+            t1 = slack_end.get(rank)
+            if t1 is None:
+                continue
+            # async pair: [dispatch, enter] is compute/comm overlap — the
+            # core is busy, so it is *not* slack and is not priced here
+            # (the caller's compute never is); it is reported separately
+            if dispatch:
+                td = dispatch.get(rank)
+                if td is not None:
+                    ov = t0 - td
+                    if ov > 0.0:
+                        a_ov += ov
+            slack = t1 - t0
+            if slack < 0.0:
+                slack = 0.0
+            a_slack += slack
+            t2 = copy_end.get(rank)
+            copy = 0.0 if t2 is None else t2 - t1
+            if copy < 0.0:
+                copy = 0.0
+            a_copy += copy
+            a_busy += slack + copy
+            a_ebase += w_slack_hi * slack
+            a_ebase += w_copy_hi * copy
+            if te_fixed is not None:
+                theta_eff = te_fixed
+            else:
+                theta = theta_used.get(rank, default_theta)
+                theta_eff = theta_eff_of.get(theta)
+                if theta_eff is None:
+                    if len(theta_eff_of) >= 4096:
+                        # adaptive tuners mint a fresh theta per decision;
+                        # the memo must not become the history it replaces
+                        theta_eff_of.clear()
+                    theta_eff = self.hw.theta_eff(theta)
+                    theta_eff_of[theta] = theta_eff
+            low = slack - theta_eff
+            if low > 0.0:
+                n_down += 1
+                a_expl += low
+            else:
+                low = 0.0
+            a_epol += w_slack_hi * (slack - low)
+            a_epol += w_slack_lo * low
+            if scope_comm and low > 0.0:
+                a_epol += w_copy_lo * copy
+            else:
+                a_epol += w_copy_hi * copy
+        acc.n_down = n_down
+        acc.slack, acc.copy, acc.busy = a_slack, a_copy, a_busy
+        acc.exploited, acc.e_base, acc.e_pol, acc.overlap = (
+            a_expl, a_ebase, a_epol, a_ov)
+
+    def _observe(self, rec: CallRecord) -> None:
+        """Feed an occurrence's arrivals to the straggler detector, at most
+        once per arrival set: a record partially observed by a mid-run
+        finalize() is observed again if new ranks entered since."""
+        n = len(rec.enter)
+        if n > rec.observed:
+            rec.observed = n
+            self.detector.observe_barrier(rec.enter)
+
+    def _retire(self, rec: CallRecord) -> None:
+        """A call occurrence is final: observe its arrivals, fold it into
+        the cumulative accumulators, evict it into the bounded ring."""
+        self._observe(rec)
+        self._accumulate(rec, self._acc)
+        self._ring.append(rec)
+
+    # the bus consumer interface ----------------------------------------------
     def sink(self, rank: int, phase: str, call_id: int, t: float) -> None:
         with self._lock:
             # recorded under the lock: the trace order must be the order the
             # governor processed events in, or replay() loses bit-exactness
             if self.recorder is not None:
                 self.recorder.on_event(rank, phase, call_id, t)
-            rec = self._calls.setdefault(call_id, CallRecord(call_id))
-            if phase in ("barrier_enter", "dispatch_enter") and (
-                rank in rec.enter or rank in rec.dispatch
-            ):
-                self._done.append(rec)                          # new occurrence
+            calls = self._calls
+            rec = calls.get(call_id)
+            if rec is None:
                 rec = CallRecord(call_id)
-                self._calls[call_id] = rec
+                calls[call_id] = rec
             if phase == "barrier_enter":
+                if rank in rec.enter or rank in rec.dispatch:
+                    self._retire(rec)                   # new occurrence
+                    rec = CallRecord(call_id)
+                    calls[call_id] = rec
                 rec.enter[rank] = t
-            elif phase == "dispatch_enter":
-                rec.dispatch[rank] = t                          # overlap starts
-            elif phase == "wait_enter":
-                rec.enter[rank] = t                             # slack starts at the wait
             elif phase == "barrier_exit":
-                self._close_slack(rec, rank, t)
+                if self.tuner is None:
+                    # _close_slack without the tuner bookkeeping, inlined:
+                    # this is the single hottest branch of the runtime
+                    rec.slack_end[rank] = t
+                    self._last_end[rank] = t
+                    slack = t - rec.enter.get(rank, t)
+                    if slack >= self._theta_default and self._timeout_armed:
+                        self._actuate(t, rank, call_id, slack)
+                else:
+                    self._close_slack(rec, rank, t)
             elif phase == "copy_exit":
-                self._close_copy(rec, rank, t)
+                if self.tuner is None:
+                    rec.copy_end[rank] = t
+                    self._last_end[rank] = t
+                else:
+                    self._close_copy(rec, rank, t)
+            elif phase == "dispatch_enter":
+                if rank in rec.enter or rank in rec.dispatch:
+                    self._retire(rec)                   # new occurrence
+                    rec = CallRecord(call_id)
+                    calls[call_id] = rec
+                rec.dispatch[rank] = t                  # overlap starts
+            elif phase == "wait_enter":
+                rec.enter[rank] = t                     # slack starts at the wait
+
+    on_event = sink          # canonical EventBus subscriber method
+
+    def on_phase(self, record: PhaseRecord) -> None:
+        """Book one fully-formed phase (the EventBus ``publish_phase``
+        consumer): same CallRecord, same timeout-policy actuation, and
+        immediate retirement — the occurrence is complete by construction.
+        """
+        rec = CallRecord(record.call_id, site=record.site)
+        rec.enter[record.rank] = record.t_enter
+        with self._lock:
+            if self.recorder is not None:
+                self.recorder.on_phase(record)
+            self._close_slack(rec, record.rank, record.t_slack_end)
+            self._close_copy(rec, record.rank, record.t_copy_end)
+            self._retire(rec)
 
     # non-collective event sources ---------------------------------------------
     def ingest_phase(
@@ -243,116 +536,92 @@ class Governor:
     ) -> None:
         """Book one fully-formed phase from a non-collective source.
 
-        Serving-side producers (decode underfill, inter-arrival idle gaps —
-        see :mod:`repro.serve.slack`) know the whole phase at once instead of
-        streaming enter/exit events; this books the same CallRecord and the
-        same timeout-policy actuation the event-sink path would.
-
-        ``site`` keys the theta tuner's histogram when the producer's call
-        ids are unique per phase (serve meters mint a fresh id per step, so
-        without a stable site every phase would start a cold histogram).
+        Kwargs-shaped convenience over :meth:`on_phase` — producers that
+        already speak the canonical vocabulary publish a
+        :class:`~repro.core.events.PhaseRecord` through the bus instead.
         """
         if t_copy_end is None:
             t_copy_end = t_slack_end
-        rec = CallRecord(call_id, site=site)
-        rec.enter[rank] = t_enter
-        with self._lock:
-            if self.recorder is not None:
-                self.recorder.on_phase(rank, call_id, t_enter, t_slack_end,
-                                       t_copy_end, site=site)
-            self._done.append(rec)
-            self._close_slack(rec, rank, t_slack_end)
-            self._close_copy(rec, rank, t_copy_end)
+        self.on_phase(PhaseRecord(rank, call_id, t_enter, t_slack_end,
+                                  t_copy_end, site))
 
     # accounting ---------------------------------------------------------------
-    def _tally(self, records: List[CallRecord]) -> Tuple[int, float, float, float, float, float, float, float]:
-        """(n_down, slack, copy, busy, exploited, e_base, e_policy, overlap)
-        over ``records`` — the shared math behind finalize() and snapshots."""
-        hw, pol = self.hw, self.policy
-        default_theta = pol.theta
-        n_down = 0
-        tot_slack = tot_copy = busy = exploited = tot_overlap = 0.0
-        e_base = e_pol = 0.0
-        for rec in records:
-            for rank, t0 in rec.enter.items():
-                t1 = rec.slack_end.get(rank)
-                if t1 is None:
-                    continue
-                # async pair: [dispatch, enter] is compute/comm overlap — the
-                # core is busy, so it is *not* slack and is not priced here
-                # (the caller's compute never is); it is reported separately
-                if rank in rec.dispatch:
-                    tot_overlap += max(t0 - rec.dispatch[rank], 0.0)
-                slack = max(t1 - t0, 0.0)
-                tot_slack += slack
-                copy = max(rec.copy_end.get(rank, t1) - t1, 0.0)
-                tot_copy += copy
-                busy += slack + copy
-                e_base += hw.watts(hw.f_max, hw.act_slack) * slack
-                e_base += hw.watts(hw.f_max, hw.act_copy) * copy
-                theta_eff = hw.theta_eff(rec.theta_used.get(rank, default_theta))
-                low = max(slack - theta_eff, 0.0)
-                if low > 0:
-                    n_down += 1
-                    exploited += low
-                e_pol += hw.watts(hw.f_max, hw.act_slack) * (slack - low)
-                e_pol += hw.watts(hw.f_min, hw.act_slack) * low
-                if pol.comm_scope == "comm" and low > 0:
-                    e_pol += hw.watts(hw.f_min, hw.act_copy) * copy
-                else:
-                    e_pol += hw.watts(hw.f_max, hw.act_copy) * copy
-        return n_down, tot_slack, tot_copy, busy, exploited, e_base, e_pol, tot_overlap
+    def recent_records(self) -> List[CallRecord]:
+        """The last ``retention`` retired occurrences (debugging only —
+        accounting never re-reads them)."""
+        with self._lock:
+            return list(self._ring)
+
+    @property
+    def n_inflight(self) -> int:
+        return len(self._calls)
 
     def interval_snapshot(self) -> IntervalStats:
-        """Stats over the phases completed since the previous snapshot.
+        """Stats over the phases retired since the previous snapshot.
 
-        Non-destructive (finalize() still sees everything) and does not
-        feed the straggler detector — it is the arbiter's per-epoch poll,
-        not the end-of-run report.  In-flight occurrences are picked up by
-        a later snapshot once they rotate into the done list.
+        An O(1) read: the cumulative accumulators minus the checkpoint
+        taken at the previous snapshot (clamped at zero — differencing
+        two running float sums can produce a negative ulp).  Non-
+        destructive for :meth:`finalize` and does not feed the straggler
+        detector — it is the arbiter's per-epoch poll, not the end-of-run
+        report.  In-flight occurrences are picked up by a later snapshot
+        once they rotate into retirement.
         """
         with self._lock:
-            records = self._done[self._mark:]
-            self._mark = len(self._done)
-        n_down, slack, copy, busy, exploited, e_base, e_pol, _ = self._tally(records)
-        return IntervalStats(
-            n_calls=len(records),
-            n_downshifts=n_down,
-            slack=slack,
-            copy=copy,
-            busy=busy,
-            exploited=exploited,
-            energy_baseline=e_base,
-            energy_policy=e_pol,
-        )
+            acc, mark = self._acc, self._mark
+            stats = IntervalStats(
+                n_calls=acc.n_records - mark.n_records,
+                n_downshifts=acc.n_down - mark.n_down,
+                slack=max(acc.slack - mark.slack, 0.0),
+                copy=max(acc.copy - mark.copy, 0.0),
+                busy=max(acc.busy - mark.busy, 0.0),
+                exploited=max(acc.exploited - mark.exploited, 0.0),
+                energy_baseline=max(acc.e_base - mark.e_base, 0.0),
+                energy_policy=max(acc.e_pol - mark.e_pol, 0.0),
+                overlap=max(acc.overlap - mark.overlap, 0.0),
+            )
+            self._mark = acc.clone()
+        return stats
 
     def finalize(self) -> GovernorReport:
-        all_records = self._done + list(self._calls.values())
-        for rec in all_records:
-            if rec.enter:
-                self.detector.observe_barrier(rec.enter)
-        n_down, tot_slack, tot_copy, _, exploited, e_base, e_pol, overlap = self._tally(all_records)
+        """End-of-run report: the cumulative accumulators plus the records
+        still in flight — O(in-flight), however long the run was."""
+        with self._lock:
+            acc = self._acc.clone()
+            for rec in self._calls.values():
+                self._observe(rec)
+                self._accumulate(rec, acc)
         return GovernorReport(
-            n_calls=len(all_records),
-            n_downshifts=n_down,
-            total_slack=tot_slack,
-            total_copy=tot_copy,
-            exploited_slack=exploited,
-            energy_baseline=e_base,
-            energy_policy=e_pol,
+            n_calls=acc.n_records,
+            n_downshifts=acc.n_down,
+            total_slack=acc.slack,
+            total_copy=acc.copy,
+            exploited_slack=acc.exploited,
+            energy_baseline=acc.e_base,
+            energy_policy=acc.e_pol,
             straggler_summary=self.detector.summary(),
             stragglers=self.detector.stragglers(),
-            total_overlap=overlap,
-            n_theta_decisions=len(self.theta_log),
+            total_overlap=acc.overlap,
+            n_theta_decisions=self._n_theta,
         )
 
     def reset(self) -> None:
+        """Return to the just-constructed state: in-flight records, ring,
+        both accumulator sets, per-rank phase ends, logs and their
+        counters, the straggler detector, and the tuner.  Two back-to-back
+        identical runs on one governor produce identical reports (pinned
+        by a regression test)."""
         with self._lock:
             self._calls.clear()
-            self._done.clear()
-            self._mark = 0
+            self._ring.clear()
+            self._acc = _Accum()
+            self._mark = _Accum()
             self._last_end.clear()
-            self.actuation_log.clear()
-            self.theta_log.clear()
+            self.n_actuations = 0
+            self._act_raw.clear()
+            self._act_log.clear()
+            self._n_theta = 0
+            self._theta_log.clear()
+            self.detector.reset()
             if self.tuner is not None:
                 self.tuner.reset()

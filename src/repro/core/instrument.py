@@ -24,6 +24,13 @@ This is the JAX analogue of the paper's PMPI interception layer (§4.1-4.2):
   LD_PRELOAD transparency: model / optimizer code always calls the wrappers
   and pays zero cost when the mode is "off".
 
+* Host events fan out through one ambient :class:`~repro.core.events.
+  EventBus` (``get_event_bus()``): the governor, a trace recorder, and any
+  further consumer subscribe side by side.  The legacy single-slot
+  ``set_event_sink``/``set_event_tee`` setters are kept as thin shims over
+  two named bus slots, so existing call sites (and the golden event
+  ordering they rely on) keep working.
+
 Modes:
   off      — wrapper == real collective (baseline).
   barrier  — artificial barrier emitted (dry-run visible, no host events).
@@ -39,23 +46,15 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.events import PHASE_NAMES, EventBus
+
 AxisNames = Union[str, Sequence[str]]
 
 _MODE = "off"
 _EVENTS_ENABLED = False
-_SINK: Optional[Callable[[int, str, int, float], None]] = None
-_TEE: Optional[Callable[[int, str, int, float], None]] = None
+_BUS = EventBus()
 _LOCK = threading.Lock()
 _CALL_COUNTER = [0]
-
-# the 5-phase event taxonomy (codes are what crosses the io_callback wire)
-PHASE_NAMES = {
-    0: "barrier_enter",      # blocking call entered; slack starts
-    1: "barrier_exit",       # artificial barrier resolved; slack ends
-    2: "copy_exit",          # real collective done; copy ends
-    3: "dispatch_enter",     # async collective dispatched; overlap starts
-    4: "wait_enter",         # caller blocks on the async handle; slack starts
-}
 
 
 def set_mode(mode: str) -> None:
@@ -78,51 +77,68 @@ def get_mode() -> str:
     return _MODE
 
 
+def get_event_bus() -> EventBus:
+    """The ambient bus the instrumented collectives publish onto.
+
+    Subscribe consumers directly: ``get_event_bus().subscribe(governor)``
+    attaches anything exposing ``on_event``/``on_phase`` (the canonical
+    subscriber protocol — see :mod:`repro.core.events`).
+    """
+    return _BUS
+
+
 def set_event_sink(sink: Optional[Callable[[int, str, int, float], None]]) -> None:
-    """Install the host event consumer: sink(rank, phase, call_id, t_host)."""
-    global _SINK
-    _SINK = sink
+    """Deprecated single-slot shim over :func:`get_event_bus`.
+
+    Occupies the bus's ``"sink"`` named slot: installing replaces the
+    previous sink, ``None`` vacates it, and any other subscribers are
+    untouched.  New code should subscribe to the bus directly.
+    """
+    if sink is None:
+        _BUS.unsubscribe("sink")
+    else:
+        _BUS.subscribe(sink, name="sink")
 
 
 def set_event_tee(tee: Optional[Callable[[int, str, int, float], None]]) -> None:
-    """Install a secondary consumer fed the identical (rank, phase, call_id,
-    t) stream — e.g. a :class:`repro.cluster.trace.TraceRecorder` recording
-    a run the governor is not attached to.  When the recorder hangs off a
-    live :class:`~repro.core.governor.Governor` instead, prefer the
+    """Deprecated single-slot shim over :func:`get_event_bus` (slot
+    ``"tee"``) — historically a secondary consumer fed the identical
+    stream, e.g. a :class:`repro.cluster.trace.TraceRecorder` recording a
+    run the governor is not attached to.  The bus made the distinction
+    moot (any number of consumers subscribe side by side); the setter
+    stays for sink-less recording call sites.  When the recorder hangs
+    off a live :class:`~repro.core.governor.Governor` instead, prefer the
     governor's ``recorder`` hook (it also captures ingested phases and
-    actuations); the tee exists for sink-less recording.
+    actuations).
     """
-    global _TEE
-    _TEE = tee
+    if tee is None:
+        _BUS.unsubscribe("tee")
+    else:
+        _BUS.subscribe(tee, name="tee")
 
 
 def reset_instrumentation() -> None:
     """Restore every piece of ambient instrumentation state to its default:
-    mode off, events disabled, no sink/tee, call counter at zero.
+    mode off, events disabled, empty bus, call counter at zero.
 
-    Ambient state otherwise leaks across tests (a sink installed by one
-    test keeps timestamping the next test's collectives); the tier-1
+    Ambient state otherwise leaks across tests (a subscriber installed by
+    one test keeps timestamping the next test's collectives); the tier-1
     ``conftest.py`` calls this around every test.
     """
-    global _MODE, _EVENTS_ENABLED, _SINK, _TEE
+    global _MODE, _EVENTS_ENABLED
     _MODE = "off"
     _EVENTS_ENABLED = False
-    _SINK = None
-    _TEE = None
+    _BUS.clear()
     with _LOCK:
         _CALL_COUNTER[0] = 0
 
 
 def _emit(rank, phase_code, call_id) -> None:
-    """Host-side callback: timestamp and forward to the governor sink."""
-    if _SINK is None and _TEE is None:
+    """Host-side callback: timestamp and publish onto the event bus."""
+    if not _BUS:
         return
-    phase = PHASE_NAMES[int(phase_code)]
-    t = time.monotonic()
-    if _SINK is not None:
-        _SINK(int(rank), phase, int(call_id), t)
-    if _TEE is not None:
-        _TEE(int(rank), phase, int(call_id), t)
+    _BUS.publish(int(rank), PHASE_NAMES[int(phase_code)], int(call_id),
+                 time.monotonic())
 
 
 def _host_event(rank: jnp.ndarray, phase_code: int, call_id: int) -> None:

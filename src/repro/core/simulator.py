@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.events import EventBus
 from repro.core.policies import Policy
 from repro.core.pstate import DEFAULT_HW, HwModel
 
@@ -162,6 +163,7 @@ def simulate(
     power_dt: Optional[float] = None,
     power_cap: Optional[float] = None,
     overlap_aware: bool = True,
+    bus: Optional[EventBus] = None,
 ) -> Tuple[SimResult, Optional[TraceRecord]]:
     """Run ``wl`` under ``pol``.
 
@@ -191,6 +193,15 @@ def simulate(
     causality as the live governor).  The per-task thresholds come back on
     ``SimResult.theta_series`` (and, with ``power_dt``, resampled onto the
     power bins as ``theta_bins``).
+
+    ``bus`` makes the simulator a producer of the canonical event stream
+    (:mod:`repro.core.events`): each task's realized per-rank phases are
+    published as 5-phase events (``dispatch_enter``/``wait_enter`` for
+    overlapped tasks, ``barrier_enter`` otherwise, then ``barrier_exit``
+    and ``copy_exit``) with the task's *site* as the recurring call id, so
+    a live :class:`~repro.core.governor.Governor`, a trace recorder, or
+    any other subscriber consumes simulated runs through exactly the
+    pipeline the instrumented collectives feed.  Zero cost when ``None``.
     """
     n, t_tasks = wl.n_ranks, wl.n_tasks
     fmax, fmin, lat = hw.f_max, hw.f_min, hw.switch_latency
@@ -436,6 +447,29 @@ def simulate(
             t = t_bar + penalty
             if power_dt and e_pen is not None:
                 segs.append((t_bar, penalty, e_pen))
+
+        # ---- synthetic event production (the canonical vocabulary) ----
+        if bus is not None:
+            # the site is the recurring call id, so a governor subscriber
+            # rotates occurrences exactly as with instrumented collectives.
+            # The async split is published only in overlap-aware mode —
+            # the naive 3-phase contrast prices the whole window as slack,
+            # so its stream starts the barrier at the window start too
+            # (subscriber reports track the SimResult they ride along with)
+            if ov_k > 0.0 and overlap_aware:
+                for r in range(n):
+                    bus.publish(r, "dispatch_enter", site, float(arrival[r]))
+                for r in range(n):
+                    bus.publish(r, "wait_enter", site, float(arrival[r] + ov_k))
+            else:
+                for r in range(n):
+                    bus.publish(r, "barrier_enter", site, float(window_start[r]))
+            for r in range(n):
+                bus.publish(r, "barrier_exit", site, float(t_bar[r]))
+            if wc > 0.0:
+                copy_ends = t_bar + d_copy
+                for r in range(n):
+                    bus.publish(r, "copy_exit", site, float(copy_ends[r]))
 
         # ---- table updates (what the runtime could actually measure) ----
         if pol.comm_mode == "predict_timeout":

@@ -88,10 +88,11 @@ def compressed_psum_start(grads: Any, axis: AxisNames,
     The caller overlaps independent compute between start and
     :func:`compressed_psum_wait` — e.g. the backward pass of the next
     microbatch while the cross-pod DCN hop flies.  The instrumented events
-    mark that window ``dispatch_enter -> wait_enter``, so the governor
-    accounts it as busy overlap, not slack: without the taxonomy split the
-    whole flight would inflate the measured slack and invite a downshift
-    while the core is at full tilt.
+    mark that window ``dispatch_enter -> wait_enter`` on the ambient
+    :class:`~repro.core.events.EventBus`, so every subscriber (governor,
+    trace recorder, ...) accounts it as busy overlap, not slack: without
+    the taxonomy split the whole flight would inflate the measured slack
+    and invite a downshift while the core is at full tilt.
     """
     flat, treedef = jax.tree.flatten(grads)
     qs = [_quantize(g) for g in flat]

@@ -24,6 +24,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.core.events import EventBus
 from repro.core.governor import Governor
 from repro.core.policies import policy_for_theta
 from repro.dist import sharding as SH
@@ -101,6 +102,10 @@ def _run_continuous(args, cfg, params, mesh, n_dev: int, mp: int) -> None:
                                        "n_requests": args.n_requests,
                                        "theta": args.theta or "default"})
     gov = Governor(policy=policy_for_theta(args.theta), recorder=recorder)
+    # the engine publishes decode phases onto a bus, not into a governor:
+    # the governor is just the first subscriber (add probes beside it)
+    bus = EventBus()
+    bus.subscribe(gov)
     tenant = None
     if args.power_cap > 0:
         from repro.cluster.job import ServeJob
@@ -109,7 +114,7 @@ def _run_continuous(args, cfg, params, mesh, n_dev: int, mp: int) -> None:
     slo = SLOTracker(tpot_target=args.tpot_target or None)
     reqs = _make_requests(args, cfg)
     t0 = time.time()
-    done = eng.serve(reqs, governor=gov, slo=slo)
+    done = eng.serve(reqs, governor=bus, slo=slo)
     dt = time.time() - t0
     n_tok = sum(len(r.out) for r in done)
     rep = gov.finalize()

@@ -103,7 +103,9 @@ def main() -> None:
     if args.instrument != "off":
         instrument.set_mode(args.instrument)
         if args.instrument == "profile":
-            instrument.set_event_sink(governor.sink)
+            # the governor is one bus subscriber among N (trace recorders,
+            # probes, ... attach beside it without displacing anything)
+            instrument.get_event_bus().subscribe(governor)
 
     em = ElasticMesh(axis_names=("data", "model"))
     mesh = em.build(model_parallel=args.model_parallel)
@@ -203,7 +205,7 @@ def main() -> None:
         path = recorder.save(args.trace_out)
         print(f"[trace] {recorder.n_seen} records ({recorder.n_dropped} dropped) -> {path}")
     instrument.set_mode("off")
-    instrument.set_event_sink(None)
+    instrument.get_event_bus().unsubscribe(governor)
 
 
 if __name__ == "__main__":

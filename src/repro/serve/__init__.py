@@ -12,7 +12,8 @@ in joules by the same governor that prices MPI slack.
                admission, join-on-prefill / evict-on-EOS slot lifecycle,
                synthetic Poisson arrival traces.
 ``slack``      the governor bridge: per-step filled-vs-capacity and idle
-               gaps become ``Governor.ingest_phase`` events.
+               gaps become canonical ``PhaseRecord`` phases published to
+               a governor or ``repro.core.events.EventBus``.
 ``slo``        per-request TTFT/TPOT percentile tracking feeding the
                scheduler's concurrency cap.
 ``engine``     :class:`ContinuousEngine` (paged, continuous) and the

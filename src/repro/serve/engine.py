@@ -252,8 +252,11 @@ class ContinuousEngine:
         """Run all requests to completion; returns them with outputs filled.
 
         Arrival offsets are honored against a wall clock started at call
-        time; idle waits and per-step underfill are reported to
-        ``governor`` (a :class:`repro.core.governor.Governor`) when given.
+        time; idle waits and per-step underfill are published as
+        :class:`~repro.core.events.PhaseRecord` phases to ``governor`` — a
+        :class:`repro.core.governor.Governor` or an
+        :class:`~repro.core.events.EventBus` with any subscriber set —
+        when given.
         """
         sched = Scheduler(self.pool, self.n_slots, n_prefix=self.cfg.n_prefix, slo=slo)
         for r in requests:

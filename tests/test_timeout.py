@@ -309,7 +309,7 @@ def test_reset_instrumentation_restores_defaults():
     assert instrument._CALL_COUNTER[0] > 0
     instrument.reset_instrumentation()
     assert instrument.get_mode() == "off"
-    assert instrument._SINK is None and instrument._TEE is None
+    assert len(instrument.get_event_bus()) == 0
     assert instrument._EVENTS_ENABLED is False
     assert instrument._CALL_COUNTER[0] == 0
     instrument._emit(0, 0, 1)                         # sinkless: no-op
