@@ -7,7 +7,8 @@ theta (cntd_adaptive) vs the paper's fixed 500 us across the three
 co-scheduling workload families (compute-bound / comm-bound / bursty).
 
 ``python benchmarks/bench_runtime.py sink_throughput`` runs just the
-governor hot-path benchmark.
+governor hot-path benchmark; ``... telemetry_overhead [--check]`` runs the
+obs-stack overhead guard (``--check`` exits non-zero past the 10% budget).
 """
 from __future__ import annotations
 
@@ -73,6 +74,79 @@ def sink_throughput(n_calls: int = 4000, n_ranks: int = 16,
     return out
 
 
+def telemetry_overhead(n_calls: int = 2500, n_ranks: int = 16,
+                       repeats: int = 7) -> dict:
+    """The obs-stack overhead guard: ``sink_throughput``'s event stream
+    through an :class:`~repro.core.events.EventBus` with (A) only the
+    governor subscribed (the bare-bus baseline) vs (B) the full telemetry
+    stack attached the way the launch drivers wire it — a
+    :class:`~repro.obs.tracer.GovernorTap` in the governor's recorder slot
+    forwarding retired occurrences and theta decisions to a
+    :class:`~repro.obs.tracer.SpanTracer` and a
+    :class:`~repro.obs.metrics.BusMetrics`, plus the cold-path costs the
+    report cadence pays (a registry snapshot and the spine-log actuation
+    pull).
+
+    A and B are interleaved (A,B,A,B,...) and compared on per-arm medians,
+    so ambient load lands on both arms instead of whichever ran second.
+    The acceptance bar (CI ``--check``): B within 10% of A
+    (``ratio >= 0.9``).
+    """
+    from repro.core.events import EventBus
+    from repro.obs.metrics import BusMetrics, MetricsRegistry
+    from repro.obs.tracer import GovernorTap, SpanTracer
+
+    n_events = 3 * n_calls * n_ranks
+
+    def stream(bus: EventBus) -> float:
+        t0 = time.perf_counter()
+        t = 0.0
+        for c in range(n_calls):
+            cid = c % 50
+            for r in range(n_ranks):
+                bus.publish(r, "barrier_enter", cid, t + r * 1e-6)
+            for r in range(n_ranks):
+                bus.publish(r, "barrier_exit", cid, t + 1e-3)
+                bus.publish(r, "copy_exit", cid, t + 1.2e-3)
+            t += 2e-3
+        return n_events / (time.perf_counter() - t0)
+
+    def bare() -> float:
+        bus = EventBus()
+        bus.subscribe(Governor())
+        return stream(bus)
+
+    def attached() -> float:
+        registry = MetricsRegistry()
+        tracer = SpanTracer()
+        tap = GovernorTap(tracer, metrics=BusMetrics(registry))
+        gov = Governor(recorder=tap)
+        bus = EventBus()
+        bus.subscribe(gov)
+        rate = stream(bus)
+        registry.snapshot()             # include the collector-sync cost
+        tracer.ingest_governor(gov)     # ... and the export-time spine pull
+        return rate
+
+    rates_a, rates_b = [], []
+    for _ in range(repeats):
+        rates_a.append(bare())
+        rates_b.append(attached())
+    med_a = float(np.median(rates_a))
+    med_b = float(np.median(rates_b))
+    out = {
+        "bare_events_per_s": med_a,
+        "telemetry_events_per_s": med_b,
+        "ratio": med_b / med_a,
+        "overhead_pct": 100.0 * (1.0 - med_b / med_a),
+        "n_events": n_events,
+        "repeats": repeats,
+    }
+    emit("bench/telemetry_overhead", 1e6 / med_b,
+         f"bare={med_a:.0f};telemetry={med_b:.0f};ratio={out['ratio']:.3f}")
+    return out
+
+
 def theta_sweep(seed: int = 0, n_tasks: int = 400) -> dict:
     """Adaptive vs fixed theta on the three tenant families (DESIGN.md §8).
 
@@ -135,6 +209,9 @@ def run(full: bool = False) -> dict:
     out["sink_throughput"] = sink_throughput()
     out["governor_events_per_s"] = out["sink_throughput"]["events_per_s"]
 
+    # obs-stack cost on the same stream (acceptance: within 10% of bare)
+    out["telemetry_overhead"] = telemetry_overhead()
+
     # artificial-barrier cost inside the simulator (paper: negligible)
     base, _ = simulate(wl, BASELINE)
     res, _ = simulate(wl, ALL_POLICIES["cntd_slack"])
@@ -164,5 +241,15 @@ if __name__ == "__main__":
         print(f"sink_throughput: {res['events_per_s']:,.0f} events/s, "
               f"finalize {res['finalize_s'] * 1e3:.2f} ms, "
               f"{res['n_retained']} records retained")
+    elif len(sys.argv) > 1 and sys.argv[1] == "telemetry_overhead":
+        print("name,us_per_call,derived")
+        res = telemetry_overhead()
+        print(f"telemetry_overhead: {res['telemetry_events_per_s']:,.0f} "
+              f"events/s with full obs stack vs {res['bare_events_per_s']:,.0f} "
+              f"bare ({res['overhead_pct']:.1f}% overhead)")
+        if "--check" in sys.argv and res["ratio"] < 0.9:
+            print(f"FAIL: telemetry overhead {res['overhead_pct']:.1f}% "
+                  f"exceeds the 10% budget (ratio {res['ratio']:.3f} < 0.9)")
+            sys.exit(1)
     else:
         run(full=True)

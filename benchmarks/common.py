@@ -3,6 +3,8 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -10,6 +12,31 @@ import numpy as np
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 os.makedirs(ART, exist_ok=True)
+
+_META_CACHE: Optional[Dict[str, Any]] = None
+
+
+def run_meta() -> Dict[str, Any]:
+    """Provenance stamp for benchmark artifacts: which code produced this
+    number, when, with what invocation.  Cached per process (the git
+    lookup is a subprocess)."""
+    global _META_CACHE
+    if _META_CACHE is None:
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "HEAD"],
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+                capture_output=True, text=True, timeout=5,
+            ).stdout.strip() or None
+        except (OSError, subprocess.SubprocessError):
+            sha = None
+        _META_CACHE = {
+            "git_sha": sha,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "argv": list(sys.argv),
+            "python": sys.version.split()[0],
+        }
+    return dict(_META_CACHE)
 
 _TRACE_CACHE: Dict[Tuple[str, int], Any] = {}
 
@@ -47,6 +74,11 @@ def emit(name: str, us_per_call: float, derived: Any) -> None:
 
 
 def save_json(name: str, payload: Any) -> str:
+    """Write one artifact; dict payloads are stamped with ``_meta``
+    provenance (git sha, timestamp, argv) without mutating the caller's
+    object."""
+    if isinstance(payload, dict) and "_meta" not in payload:
+        payload = {**payload, "_meta": run_meta()}
     path = os.path.join(ART, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)

@@ -27,8 +27,24 @@ from repro.core.policies import ALL_POLICIES  # noqa: E402
 GOLDEN_DIR = os.path.join(REPO, "tests", "goldens")
 
 
+def regen_perfetto() -> None:
+    """Refresh the golden Perfetto trace (tests/test_obs.py); the canned
+    capture itself lives beside the test so both stay in lockstep."""
+    import conftest  # noqa: E402,F401 — registers the hypothesis fallback
+    from test_obs import golden_tracer  # noqa: E402
+
+    path = os.path.join(GOLDEN_DIR, "perfetto.json")
+    with open(path, "w") as f:
+        f.write(json.dumps(golden_tracer().build(), sort_keys=True))
+    print(f"wrote {path}")
+
+
 def main() -> None:
     os.makedirs(GOLDEN_DIR, exist_ok=True)
+    if "--perfetto" in sys.argv:
+        regen_perfetto()
+        return
+    regen_perfetto()
     for kind in CANNED:
         payload = {
             "workload": kind,

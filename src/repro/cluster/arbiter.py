@@ -26,7 +26,7 @@ allocations never exceeds ``cap_w`` and no active job is ever below
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Callable, Dict, List, Optional
 
 _EPS = 1e-9
 
@@ -63,9 +63,26 @@ class PowerBudgetArbiter:
     alpha_w: float = 25.0             # additive-increase step (W/job/epoch)
     alloc: Dict[str, float] = field(default_factory=dict)
     history: List[Dict[str, float]] = field(default_factory=list)
+    # observability hook: called with the new grants at the end of every
+    # step (epoch index, {job: watts}) — the tracer/registry wire here
+    grant_hook: Optional[Callable[[int, Dict[str, float]], None]] = None
 
     def allocations(self) -> Dict[str, float]:
         return dict(self.alloc)
+
+    def export_metrics(self, registry) -> None:
+        """Publish the current grants into a :class:`repro.obs.metrics.
+        MetricsRegistry`: ``arbiter_grant_watts{job=...}`` plus the fixed
+        cluster cap and the unallocated pool."""
+        grants = registry.gauge("arbiter_grant_watts",
+                                "watts granted per job", ("job",))
+        for job, w in self.alloc.items():
+            grants.labels(job).set(w)
+        registry.gauge("arbiter_cap_watts", "cluster cap").set(self.cap_w)
+        registry.gauge("arbiter_pool_watts", "unallocated watts").set(
+            self.cap_w - sum(self.alloc.values()))
+        registry.counter("arbiter_epochs_total", "arbitration epochs").labels() \
+            .set(float(len(self.history)))
 
     def step(self, samples: List[JobSample]) -> Dict[str, float]:
         """One arbitration epoch: consume telemetry, return new caps."""
@@ -82,6 +99,8 @@ class PowerBudgetArbiter:
         self.alloc = {j: self.alloc.get(j, self.floor_w) for j in ids}
         if not self.alloc:
             self.history.append({})
+            if self.grant_hook is not None:
+                self.grant_hook(len(self.history) - 1, {})
             return {}
 
         # multiplicative decrease: slack-rich jobs release headroom
@@ -114,6 +133,8 @@ class PowerBudgetArbiter:
             }
 
         self.history.append(dict(self.alloc))
+        if self.grant_hook is not None:
+            self.grant_hook(len(self.history) - 1, dict(self.alloc))
         return dict(self.alloc)
 
 

@@ -61,6 +61,58 @@ class ManagedJob:
         self.reports: List[EpochReport] = []
         self.total_energy_j = 0.0
         self.total_wall_s = 0.0
+        self._obs = None                 # (gauges dict, tracer) once attached
+
+    def attach_obs(self, registry, tracer=None, clock=None) -> None:
+        """Publish every booked epoch into a :class:`repro.obs.metrics.
+        MetricsRegistry` (``job_*{job=...}`` series) and, when a
+        :class:`repro.obs.tracer.SpanTracer` is given, sample cap/power
+        counter tracks on its ``arbiter`` track.
+
+        ``clock`` sets the trace time base: live tenants pass
+        ``time.monotonic`` so arbiter samples line up with the bus's phase
+        events; the default (tenant wall clock) is right for simulated
+        tenants, whose events live on their own clock anyway."""
+        jid = self.job_id
+        gauges = {
+            "cap": registry.gauge("job_cap_watts",
+                                  "cap in force (post-actuator)",
+                                  ("job",)).labels(jid),
+            "power": registry.gauge("job_power_watts",
+                                    "epoch average draw", ("job",)).labels(jid),
+            "exploited": registry.gauge("job_exploited_ratio",
+                                        "f_min time per rank-second",
+                                        ("job",)).labels(jid),
+            "overlap": registry.gauge("job_overlap_ratio",
+                                      "dispatch->wait overlap per rank-second",
+                                      ("job",)).labels(jid),
+            "energy": registry.counter("job_energy_joules_total",
+                                       "energy booked across epochs",
+                                       ("job",)).labels(jid),
+            "epochs": registry.counter("job_epochs_total",
+                                       "arbitration epochs booked",
+                                       ("job",)).labels(jid),
+        }
+        self._obs = (gauges, tracer, clock)
+
+    def _book(self, rep: EpochReport) -> EpochReport:
+        self.reports.append(rep)
+        self.total_energy_j += rep.energy_j
+        self.total_wall_s += rep.wall_s
+        if self._obs is not None:
+            gauges, tracer, clock = self._obs
+            gauges["cap"].set(rep.cap_w)
+            gauges["power"].set(rep.power_w)
+            gauges["exploited"].set(rep.exploited_ratio)
+            gauges["overlap"].set(rep.overlap_ratio)
+            gauges["energy"].inc(rep.energy_j)
+            gauges["epochs"].inc()
+            if tracer is not None:
+                t = clock() if clock is not None else self.total_wall_s
+                tracer.sample("arbiter", f"cap_w[{self.job_id}]", t, rep.cap_w)
+                tracer.sample("arbiter", f"power_w[{self.job_id}]", t,
+                              rep.power_w)
+        return rep
 
     @property
     def done(self) -> bool:
@@ -72,12 +124,6 @@ class ManagedJob:
         r = self.reports[-1]
         return JobSample(self.job_id, r.power_w, r.exploited_ratio, done=r.done,
                          overlap_ratio=r.overlap_ratio)
-
-    def _book(self, rep: EpochReport) -> EpochReport:
-        self.reports.append(rep)
-        self.total_energy_j += rep.energy_j
-        self.total_wall_s += rep.wall_s
-        return rep
 
     def run_epoch(self, cap_w: float) -> EpochReport:
         raise NotImplementedError
@@ -154,13 +200,20 @@ class GovernorJob(ManagedJob):
         self._t_prev = self._t0
         self.finished = False            # owner flips when the loop exits
 
-    def run_epoch(self, cap_w: float) -> EpochReport:
+    def run_epoch(self, cap_w: float, stats=None) -> EpochReport:
+        """Book one epoch.  ``stats`` (an :class:`~repro.core.governor.
+        IntervalStats`) lets a caller that already polls the governor —
+        e.g. a :class:`repro.obs.metrics.GovernorCollector` on the same
+        cadence — hand its poll over instead of double-polling: the
+        governor keeps a single snapshot mark, so two independent pollers
+        would each see only half the interval stream."""
         now = time.monotonic()
         self.actuator.request(now - self._t0, cap_w)
         cap = self.actuator.cap_at(now - self._t0 + self.actuator.latency)
         dt = max(now - self._t_prev, 1e-9)
         self._t_prev = now
-        stats = self.governor.interval_snapshot()
+        if stats is None:
+            stats = self.governor.interval_snapshot()
         hw = self.hw
         rank_s = self.n_ranks * dt
         exploited = min(stats.exploited, rank_s)

@@ -230,6 +230,19 @@ class Governor:
         self.hw = hw
         self.detector = detector or StragglerDetector()
         self.recorder = recorder     # cluster.trace.TraceRecorder-compatible
+        # Recorder hooks are resolved once: sink() runs per event, so an
+        # absent hook must cost one None check, not a getattr + no-op call.
+        # A recorder exposing the *spine* hooks (``on_actuation_pair``,
+        # ``on_retired`` — see repro.obs.tracer.GovernorTap) keeps the
+        # lazy/cheap paths the bare governor uses; one exposing only the
+        # eager ``on_actuation`` (cluster.trace.TraceRecorder) still gets
+        # fully-built Actuation values in stream order.
+        self._rec_event = getattr(recorder, "on_event", None)
+        self._rec_phase = getattr(recorder, "on_phase", None)
+        self._rec_act = getattr(recorder, "on_actuation", None)
+        self._rec_theta = getattr(recorder, "on_theta", None)
+        self._rec_pair = getattr(recorder, "on_actuation_pair", None)
+        self._rec_retire = getattr(recorder, "on_retired", None)
         if tuner is None and policy.theta_mode == "adaptive":
             tuner = ThetaTuner(hw=hw, theta0=policy.theta)
         self.tuner = tuner
@@ -281,7 +294,17 @@ class Governor:
 
     def _actuate(self, t: float, rank: int, call_id: int, slack: float) -> None:
         self.n_actuations += 2
-        if self.recorder is None:
+        rec_pair = self._rec_pair
+        if rec_pair is not None:
+            # spine-aware recorder: keep the lazy path (one tuple append)
+            # and hand it the compact pair
+            self._act_raw.append((t, rank, call_id, slack))
+            rec_pair(t, rank, call_id, slack)
+            return
+        if self._rec_act is None:
+            # no recorder, or one that (like the obs GovernorTap) reads
+            # actuations back from the spine log after the run instead of
+            # paying a per-downshift call on the hot path
             self._act_raw.append((t, rank, call_id, slack))
             return
         pair = (
@@ -290,7 +313,7 @@ class Governor:
         )
         self._act_log.extend(pair)
         for act in pair:
-            self.recorder.on_actuation(act)
+            self._rec_act(act)
 
     @property
     def actuation_log(self) -> List[Actuation]:
@@ -318,8 +341,8 @@ class Governor:
             return
         self._n_theta += 1
         self._theta_log.append(dec)
-        if self.recorder is not None and hasattr(self.recorder, "on_theta"):
-            self.recorder.on_theta(dec)
+        if self._rec_theta is not None:
+            self._rec_theta(dec)
 
     @property
     def theta_log(self) -> List[ThetaDecision]:
@@ -469,8 +492,8 @@ class Governor:
         with self._lock:
             # recorded under the lock: the trace order must be the order the
             # governor processed events in, or replay() loses bit-exactness
-            if self.recorder is not None:
-                self.recorder.on_event(rank, phase, call_id, t)
+            if self._rec_event is not None:
+                self._rec_event(rank, phase, call_id, t)
             calls = self._calls
             rec = calls.get(call_id)
             if rec is None:
@@ -479,6 +502,8 @@ class Governor:
             if phase == "barrier_enter":
                 if rank in rec.enter or rank in rec.dispatch:
                     self._retire(rec)                   # new occurrence
+                    if self._rec_retire is not None:
+                        self._rec_retire(rec)
                     rec = CallRecord(call_id)
                     calls[call_id] = rec
                 rec.enter[rank] = t
@@ -502,6 +527,8 @@ class Governor:
             elif phase == "dispatch_enter":
                 if rank in rec.enter or rank in rec.dispatch:
                     self._retire(rec)                   # new occurrence
+                    if self._rec_retire is not None:
+                        self._rec_retire(rec)
                     rec = CallRecord(call_id)
                     calls[call_id] = rec
                 rec.dispatch[rank] = t                  # overlap starts
@@ -518,8 +545,8 @@ class Governor:
         rec = CallRecord(record.call_id, site=record.site)
         rec.enter[record.rank] = record.t_enter
         with self._lock:
-            if self.recorder is not None:
-                self.recorder.on_phase(record)
+            if self._rec_phase is not None:
+                self._rec_phase(record)
             self._close_slack(rec, record.rank, record.t_slack_end)
             self._close_copy(rec, record.rank, record.t_copy_end)
             self._retire(rec)

@@ -3,7 +3,11 @@ hierarchical report.
 
 * ``EventProfiler`` — per-MPI-call records (site, rank, durations, bytes),
   the analogue of the RDPMC fixed-counter path.  Sources: the simulator's
-  ``TraceRecord`` or the live governor's call records.
+  ``TraceRecord``, or a live run via ``on_phase`` — the profiler is an
+  :class:`~repro.core.events.EventBus` subscriber, so
+  ``bus.subscribe(profiler)`` folds every fully-formed
+  :class:`~repro.core.events.PhaseRecord` the governor reconstructs into
+  the same per-site statistics.
 * ``TimeProfiler``  — a sampling thread (default 1 s) that snapshots
   host-wide counters (process CPU time, wall time, rss), the analogue of the
   MSR_SAFE batch-mode node sampler.
@@ -23,7 +27,10 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.events import PhaseRecord
 from repro.core.simulator import TraceRecord
+
+UNSITED = -1        # site bucket for phase records with no call-site tag
 
 
 class EventProfiler:
@@ -42,6 +49,18 @@ class EventProfiler:
         s["tcopy"] += copy
         s["bytes"] += nbytes
         self.per_rank_slack[rank] += slack
+
+    def on_phase(self, record: PhaseRecord) -> None:
+        """EventBus subscription: fold one reconstructed phase.  Byte counts
+        are not observable from the event stream (the instrument never sees
+        payload sizes), so ``bytes`` stays 0 for live-sourced sites."""
+        self.record_call(
+            UNSITED if record.site is None else int(record.site),
+            record.rank,
+            max(record.t_slack_end - record.t_enter, 0.0),
+            max(record.t_copy_end - record.t_slack_end, 0.0),
+            0.0,
+        )
 
     def ingest_trace(self, trace: TraceRecord) -> None:
         t_tasks, n = trace.slack.shape
@@ -96,12 +115,19 @@ class TimeProfiler:
 def hierarchical_report(
     event: EventProfiler,
     timep: Optional[TimeProfiler] = None,
-    n_ranks: int = 1,
+    n_ranks: Optional[int] = None,
     ranks_per_node: int = 36,
     sockets_per_node: int = 2,
     extra: Optional[Dict[str, Any]] = None,
 ) -> Dict[str, Any]:
-    """The paper's summary/MPI/node/socket/core hierarchy as one dict."""
+    """The paper's summary/MPI/node/socket/core hierarchy as one dict.
+
+    ``n_ranks=None`` infers the fleet size from the ranks actually seen —
+    the natural mode for a live-governor-fed profiler, where the caller
+    has no simulator config to quote.
+    """
+    if n_ranks is None:
+        n_ranks = (max(event.per_rank_slack) + 1) if event.per_rank_slack else 1
     total_slack = sum(event.per_rank_slack.values())
     total_copy = sum(s["tcopy"] for s in event.sites.values())
     summary = {

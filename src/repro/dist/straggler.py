@@ -88,6 +88,21 @@ class StragglerDetector:
         out.sort(key=lambda rz: -rz[1])
         return out
 
+    def export_metrics(self, registry) -> None:
+        """Publish detector state into a :class:`repro.obs.metrics.
+        MetricsRegistry`: mean lateness per rank, plus the z-score of every
+        currently-flagged straggler (ranks no longer flagged drop to 0 so a
+        dashboard shows recovery, not a stale alarm)."""
+        late = registry.gauge("straggler_mean_lateness_seconds",
+                              "per-rank mean barrier lateness", ("rank",))
+        zscore = registry.gauge("straggler_z_score",
+                                "z-score of flagged straggler ranks", ("rank",))
+        for rank, mean in self.summary().items():
+            late.labels(rank).set(mean)
+        flagged = dict(self.stragglers())
+        for rank in self._count:
+            zscore.labels(rank).set(flagged.get(rank, 0.0))
+
     def reset(self) -> None:
         self._late_sum.clear()
         self._count.clear()

@@ -45,6 +45,9 @@ from repro.core import instrument
 from repro.dist import sharding as SH
 from repro.dist.compat import set_mesh
 from repro.launch.mesh import make_production_mesh
+from repro.obs import log as obslog
+
+log = obslog.get_logger("dryrun")
 from repro.models.hooks import install_constraint
 from repro.models.inputs import decode_inputs_specs, input_specs
 from repro.models.transformer import init_cache, init_params
@@ -318,7 +321,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, force=False,
             )
             t_scan = time.time() - t0
             ma = compiled.memory_analysis()
-            print(ma)
+            log.debug("memory_analysis", cell=f"{arch}/{shape_name}/{mesh_kind}",
+                      analysis=str(ma))
             record.update(
                 status="ok",
                 compile_scan_s=round(t_scan, 2),
@@ -360,7 +364,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, force=False,
             )
             t_unroll = time.time() - t0
             ca = compiled.cost_analysis()
-            print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+            log.debug("cost_analysis", cell=f"{arch}/{shape_name}/{mesh_kind}",
+                      flops=ca.get("flops"),
+                      bytes_accessed=ca.get("bytes accessed"))
             hlo = compiled.as_text()
             record.update(
                 compile_unroll_s=round(t_unroll, 2),
@@ -404,7 +410,9 @@ def main() -> None:
                     help="bf16 gradient reduction (hillclimb)")
     ap.add_argument("--zero3", action="store_true",
                     help="pure ZeRO-3 sharding, no TP (hillclimb)")
+    obslog.add_flags(ap)
     args = ap.parse_args()
+    obslog.configure_from_args(args)
 
     cells = []
     archs = list(ARCHS[:10]) if (args.all or not args.arch) else [args.arch]
@@ -429,17 +437,18 @@ def main() -> None:
         ok += status == "ok"
         err += status == "error"
         skip += status == "skipped"
-        extra = ""
+        fields = {"cell": f"{a} {s} {m}", "status": status}
         if status == "ok":
-            peak = rec["memory"]["peak_args_plus_temp"] / 2**30
-            extra = (
-                f"peak/dev={peak:.2f}GiB compile="
-                f"{rec.get('compile_scan_s')}s+{rec.get('compile_unroll_s')}s"
-            )
+            fields["peak_gib"] = rec["memory"]["peak_args_plus_temp"] / 2**30
+            fields["compile_s"] = (f"{rec.get('compile_scan_s')}+"
+                                   f"{rec.get('compile_unroll_s')}")
+            log.info("cell", **fields)
         elif status == "error":
-            extra = rec["error"][:120]
-        print(f"[{status:7s}] {a} {s} {m} {extra}", flush=True)
-    print(f"done: {ok} ok, {skip} skipped, {err} errors")
+            fields["error"] = rec["error"][:120]
+            log.error("cell", **fields)
+        else:
+            log.info("cell", **fields)
+    log.info("done", ok=ok, skipped=skip, errors=err)
     sys.exit(1 if err else 0)
 
 

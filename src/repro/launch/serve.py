@@ -32,6 +32,7 @@ from repro.dist.compat import set_mesh
 from repro.models import init_params
 from repro.models.hooks import install_constraint
 from repro.models.inputs import make_batch
+from repro.obs import log as obslog
 from repro.serve import (
     ContinuousEngine,
     Request,
@@ -39,6 +40,8 @@ from repro.serve import (
     SLOTracker,
     poisson_arrivals,
 )
+
+log = obslog.get_logger("serve")
 
 
 def _run_static(args, cfg, params) -> None:
@@ -54,10 +57,10 @@ def _run_static(args, cfg, params) -> None:
     out = jax.block_until_ready(eng.generate(batch, n_steps=args.steps,
                                              key=jax.random.PRNGKey(1)))
     dt = time.time() - t0
-    print(f"[serve] {args.arch}: {out.shape} tokens in {dt:.2f}s "
-          f"({args.batch * args.steps / dt:.1f} tok/s, compile {t_compile:.2f}s, "
-          f"kv_int8={args.kv_int8})")
-    print(f"[serve] sample: {out[0].tolist()}")
+    log.info("static_done", arch=args.arch, shape=str(out.shape), wall_s=dt,
+             tok_per_s=args.batch * args.steps / dt, compile_s=t_compile,
+             kv_int8=args.kv_int8)
+    log.info("sample", tokens=out[0].tolist())
 
 
 def _make_requests(args, cfg) -> list:
@@ -94,24 +97,57 @@ def _run_continuous(args, cfg, params, mesh, n_dev: int, mp: int) -> None:
     eng.generate(warm, n_steps=2)
     t_compile = time.time() - t0
 
-    recorder = None
+    recorder = trace_rec = None
     if args.trace_out:
         from repro.cluster.trace import TraceRecorder
 
-        recorder = TraceRecorder(meta={"driver": "serve", "arch": args.arch,
-                                       "n_requests": args.n_requests,
-                                       "theta": args.theta or "default"})
+        recorder = trace_rec = TraceRecorder(
+            meta={"driver": "serve", "arch": args.arch,
+                  "n_requests": args.n_requests,
+                  "theta": args.theta or "default"})
+
+    registry = tracer = collector = busmetrics = writer = dash = None
+    obs_on = bool(args.perfetto_out or args.metrics_out or args.dashboard)
+    if obs_on:
+        from repro.obs.export import ConsoleDashboard, MetricsJsonlWriter
+        from repro.obs.metrics import BusMetrics, GovernorCollector, MetricsRegistry
+        from repro.obs.tracer import GovernorTap, RecorderFanout, SpanTracer
+
+        registry = MetricsRegistry()
+        busmetrics = BusMetrics(registry)
+        if args.perfetto_out:
+            tracer = SpanTracer(meta={"driver": "serve", "arch": args.arch,
+                                      "n_requests": args.n_requests})
+            eng.tracer = tracer
+        # production wiring: metrics + tracer ride the governor's recorder
+        # slot (ingested phases, retired occurrences, theta decisions) —
+        # exactly one phase source each, never a second bus subscription,
+        # or every phase would double-count
+        tap = GovernorTap(tracer, metrics=busmetrics)
+        recorder = RecorderFanout([recorder, tap]) if recorder is not None \
+            else tap
+
     gov = Governor(policy=policy_for_theta(args.theta), recorder=recorder)
     # the engine publishes decode phases onto a bus, not into a governor:
     # the governor is just the first subscriber (add probes beside it)
     bus = EventBus()
     bus.subscribe(gov)
+    if registry is not None:
+        collector = GovernorCollector(registry, gov)
+        if args.metrics_out:
+            writer = MetricsJsonlWriter(args.metrics_out, registry, collector)
+        if args.dashboard:
+            dash = ConsoleDashboard(registry, title=f"serve {args.arch}")
     tenant = None
     if args.power_cap > 0:
         from repro.cluster.job import ServeJob
 
         tenant = ServeJob("serve", eng, gov, cap_w=args.power_cap, n_ranks=n_dev)
+        if registry is not None:
+            tenant.attach_obs(registry, tracer, clock=time.monotonic)
     slo = SLOTracker(tpot_target=args.tpot_target or None)
+    if registry is not None:
+        registry.add_collector(lambda: slo.export_metrics(registry))
     reqs = _make_requests(args, cfg)
     t0 = time.time()
     done = eng.serve(reqs, governor=bus, slo=slo)
@@ -119,31 +155,46 @@ def _run_continuous(args, cfg, params, mesh, n_dev: int, mp: int) -> None:
     n_tok = sum(len(r.out) for r in done)
     rep = gov.finalize()
     meter = eng._last_meter
-    print(f"[serve] {args.arch} continuous: {len(done)} requests, {n_tok} tokens "
-          f"in {dt:.2f}s ({n_tok / dt:.1f} tok/s, compile {t_compile:.2f}s, "
-          f"fill {meter.fill_fraction:.2f}, kv_int8={args.kv_int8})")
-    print(f"[serve] slack: {rep.total_slack * 1e3:.1f} ms priced over "
-          f"{rep.n_calls} phases, {rep.n_downshifts} downshifts, "
-          f"{len(gov.actuation_log)} actuations, "
-          f"energy saving {rep.energy_saving_pct:.1f}%")
+    log.info("continuous_done", arch=args.arch, requests=len(done),
+             tokens=n_tok, wall_s=dt, tok_per_s=n_tok / dt,
+             compile_s=t_compile, fill=meter.fill_fraction,
+             kv_int8=args.kv_int8)
+    log.info("slack", priced_ms=rep.total_slack * 1e3, phases=rep.n_calls,
+             downshifts=rep.n_downshifts, actuations=len(gov.actuation_log),
+             energy_saving_pct=rep.energy_saving_pct)
     if gov.tuner is not None:
         per_site = {s: f"{th * 1e6:.0f}us" for s, th in gov.tuner.summary().items()}
-        print(f"[serve] theta auto: {rep.n_theta_decisions} decisions, "
-              f"final theta per site {per_site}")
+        log.info("theta_auto", decisions=rep.n_theta_decisions,
+                 theta_per_site=per_site)
     s = slo.summary()
-    print(f"[serve] SLO: TTFT p95 {s['ttft']['p95'] * 1e3:.1f} ms, "
-          f"TPOT p95 {s['tpot']['p95'] * 1e3:.1f} ms over "
-          f"{s['completed']} completed")
+    log.info("slo", ttft_p95_ms=s["ttft"]["p95"] * 1e3,
+             tpot_p95_ms=s["tpot"]["p95"] * 1e3, completed=s["completed"])
+    if tracer is not None:
+        tnow = time.monotonic()
+        tracer.sample("slo", "ttft_p95_ms", tnow, s["ttft"]["p95"] * 1e3)
+        tracer.sample("slo", "tpot_p95_ms", tnow, s["tpot"]["p95"] * 1e3)
     if tenant is not None:
-        er = tenant.run_epoch(args.power_cap)
-        print(f"[power] cap={er.cap_w:.1f}W draw={er.power_w:.1f}W "
-              f"exploited={100 * er.exploited_ratio:.1f}% "
-              f"fill={tenant.fill_fraction:.2f}")
-    if recorder is not None:
-        recorder.meta["report"] = rep.to_dict()
-        path = recorder.save(args.trace_out)
-        print(f"[trace] {recorder.n_seen} records ({recorder.n_dropped} dropped) "
-              f"-> {path}")
+        stats = collector.collect() if collector is not None else None
+        er = tenant.run_epoch(args.power_cap, stats=stats)
+        log.info("power", cap_w=er.cap_w, draw_w=er.power_w,
+                 exploited_pct=100 * er.exploited_ratio,
+                 fill=tenant.fill_fraction)
+    if writer is not None:
+        writer.write()
+        writer.close()
+        log.info("metrics_out", path=args.metrics_out, lines=writer.n_lines)
+    if dash is not None:
+        dash.tick()
+    if tracer is not None:
+        tracer.ingest_governor(gov)         # spine-log actuations, once
+        path = tracer.save(args.perfetto_out)
+        log.info("perfetto_out", path=path, events=tracer.n_seen,
+                 dropped=tracer.n_dropped)
+    if trace_rec is not None:
+        trace_rec.meta["report"] = rep.to_dict()
+        path = trace_rec.save(args.trace_out)
+        log.info("trace_out", records=trace_rec.n_seen,
+                 dropped=trace_rec.n_dropped, path=path)
 
 
 def main() -> None:
@@ -176,8 +227,21 @@ def main() -> None:
     ap.add_argument("--power-cap", type=float, default=0.0,
                     help="job power cap in watts: attach a cluster.ServeJob tenant "
                          "+ RAPL-style cap actuator and report draw vs cap")
+    ap.add_argument("--perfetto-out", default="",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(continuous mode: decode phase track, governor "
+                         "counters, serve join/evict instants)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write metrics-registry snapshots (with the exact "
+                         "cumulative GovernorReport) to this JSONL file "
+                         "(continuous mode)")
+    ap.add_argument("--dashboard", action="store_true",
+                    help="render the telemetry dashboard after the run "
+                         "(continuous mode)")
+    obslog.add_flags(ap)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    obslog.configure_from_args(args)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -195,10 +259,13 @@ def main() -> None:
         psh = SH.serve_param_shardings(mesh, params)
         params = jax.tree.map(lambda a, s: jax.device_put(a, s), params, psh)
 
-    if not args.continuous and (args.theta or args.trace_out or args.power_cap > 0):
+    if not args.continuous and (args.theta or args.trace_out or args.power_cap > 0
+                                or args.perfetto_out or args.metrics_out
+                                or args.dashboard):
         # static mode builds no governor: these flags would be silent no-ops
-        print("[serve] --theta/--trace-out/--power-cap need the continuous "
-              "engine's governor; ignored in static mode (add --continuous)")
+        log.warning("flags_ignored",
+                    why="--theta/--trace-out/--power-cap/telemetry need the "
+                        "continuous engine's governor (add --continuous)")
 
     with set_mesh(mesh):
         if args.continuous:

@@ -28,9 +28,12 @@ from repro.dist.checkpoint import CheckpointManager
 from repro.dist.compat import set_mesh
 from repro.dist.elastic import ElasticMesh, FailureInjector
 from repro.models.hooks import install_constraint
+from repro.obs import log as obslog
 from repro.train.data import DataLoader
 from repro.train.loop import TrainConfig, init_state, make_train_step
 from repro.train.optimizer import OptConfig
+
+log = obslog.get_logger("train")
 
 
 def build(mesh, cfg, opt_cfg, state_host):
@@ -40,6 +43,59 @@ def build(mesh, cfg, opt_cfg, state_host):
     sh = {"params": ps, "opt": osd}
     state = jax.tree.map(lambda a, s: jax.device_put(a, s), state_host, sh)
     step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0,))
+    return state, step_fn
+
+
+def build_live(mesh, cfg, opt_cfg, state_host):
+    """Fully-manual data-parallel step with instrumented collectives.
+
+    The production ``build`` path partitions with jit + sharding rules; its
+    collectives are XLA-inserted, so the host phase events (io_callback)
+    that feed the governor/telemetry never fire.  ``--live-events`` swaps in
+    this step: replicated params/opt, batch split over "data", and the
+    gradient/loss all-reduce routed through ``cd_psum`` — the artificial
+    barrier + 3-phase event sequence of the paper's PMPI layer, legal here
+    because the whole region is manual over every mesh axis.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.instrument import cd_psum
+    from repro.dist.compat import shard_map
+    from repro.models.transformer import loss_fn
+    from repro.train.optimizer import adamw_update
+
+    n_data = int(mesh.shape["data"])
+
+    def per_device_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch)[0])(params)
+        grads = cd_psum(grads, "data")
+        grads = jax.tree.map(lambda g: g / n_data, grads)
+        loss = cd_psum(loss, "data") / n_data
+        params, opt, m = adamw_update(params, grads, opt, opt_cfg)
+        return {"params": params, "opt": opt}, {**m, "loss": loss}
+
+    repl = NamedSharding(mesh, P())
+    dsh = NamedSharding(mesh, P("data"))
+    state = jax.device_put(state_host,
+                           jax.tree.map(lambda _: repl, state_host))
+    # fully-specified jit shardings: required on the pinned container jax
+    # (the profile-mode io_callback token otherwise desyncs XLA's
+    # sharding-propagation parameter vector)
+    step_fn = jax.jit(
+        shard_map(
+            per_device_step, mesh=mesh,
+            in_specs=(P(), P("data")), out_specs=(P(), P()),
+            manual_axes=set(mesh.axis_names),
+        ),
+        in_shardings=(
+            jax.tree.map(lambda _: repl, state),
+            {"tokens": dsh, "labels": dsh, "mask": dsh},
+        ),
+        out_shardings=(jax.tree.map(lambda _: repl, state),
+                       {"grad_norm": repl, "lr": repl, "loss": repl}),
+    )
     return state, step_fn
 
 
@@ -58,6 +114,12 @@ def main() -> None:
     ap.add_argument("--fail-at", type=int, default=0,
                     help="simulate a node failure at this step (fault-tolerance demo)")
     ap.add_argument("--instrument", choices=["off", "barrier", "profile"], default="off")
+    ap.add_argument("--live-events", action="store_true",
+                    help="run the step as a fully-manual data-parallel shard_map "
+                         "with cd_psum gradient reduction, so host phase events "
+                         "actually fire (the jit path's XLA-inserted collectives "
+                         "cannot emit them); implies --instrument profile and "
+                         "data parallelism only")
     ap.add_argument("--theta", default="",
                     help="governor timeout: seconds (e.g. 500e-6), or 'auto' for "
                          "the online ThetaTuner (cntd_adaptive policy); empty = "
@@ -69,8 +131,21 @@ def main() -> None:
                     help="job power cap in watts: attach a cluster.GovernorJob tenant "
                          "+ RAPL-style cap actuator and report per-interval power "
                          "(implies --instrument profile)")
+    ap.add_argument("--perfetto-out", default="",
+                    help="write a Chrome-trace/Perfetto JSON of the run (per-rank "
+                         "phase tracks + governor/arbiter counter tracks; implies "
+                         "--instrument profile)")
+    ap.add_argument("--metrics-out", default="",
+                    help="append one metrics-registry snapshot per report interval "
+                         "to this JSONL file, each embedding the exact cumulative "
+                         "GovernorReport (implies --instrument profile)")
+    ap.add_argument("--dashboard", action="store_true",
+                    help="render a console telemetry dashboard at the report "
+                         "cadence (implies --instrument profile)")
+    obslog.add_flags(ap)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    obslog.configure_from_args(args)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -86,26 +161,63 @@ def main() -> None:
         recorder = TraceRecorder(meta={"driver": "train", "arch": args.arch,
                                        "steps": args.steps,
                                        "theta": args.theta or "default"})
-    if (args.trace_out or args.power_cap > 0 or args.theta) and args.instrument != "profile":
+    obs_on = bool(args.perfetto_out or args.metrics_out or args.dashboard)
+    if args.live_events and args.model_parallel != 1:
+        log.warning("live_events_dp_only", model_parallel=args.model_parallel,
+                    using=1)
+        args.model_parallel = 1
+    if (args.trace_out or args.power_cap > 0 or args.theta or obs_on
+            or args.live_events) and args.instrument != "profile":
         # the recorder records events, the tenant polls interval snapshots,
-        # and the governor/tuner consumes them: all are empty (a silent
-        # no-op) without the profile-mode event stream
-        print(f"[train] --trace-out/--power-cap/--theta need phase events: "
-              f"instrument {args.instrument!r} -> 'profile'")
+        # the telemetry stack consumes both, and the governor/tuner feeds
+        # them all: everything is empty (a silent no-op) without the
+        # profile-mode event stream
+        log.info("instrument_upgrade", requested=args.instrument, using="profile",
+                 why="--trace-out/--power-cap/--theta/telemetry need phase events")
         args.instrument = "profile"
+
+    registry = tracer = collector = busmetrics = writer = dash = None
+    if obs_on:
+        from repro.obs.export import ConsoleDashboard, MetricsJsonlWriter
+        from repro.obs.metrics import BusMetrics, GovernorCollector, MetricsRegistry
+        from repro.obs.tracer import GovernorTap, RecorderFanout, SpanTracer
+
+        registry = MetricsRegistry()
+        busmetrics = BusMetrics(registry)
+        if args.perfetto_out:
+            tracer = SpanTracer(meta={"driver": "train", "arch": args.arch,
+                                      "steps": args.steps})
+        # production wiring: the whole obs stack rides the governor's
+        # recorder slot (retired occurrences + theta decisions), never the
+        # per-event bus — that is the 10% bench budget's contract
+        tap = GovernorTap(tracer, metrics=busmetrics)
+        recorder = RecorderFanout([recorder, tap]) if recorder is not None \
+            else tap
     governor = Governor(policy=policy_for_theta(args.theta), recorder=recorder)
+    if registry is not None:
+        collector = GovernorCollector(registry, governor)
+        if args.metrics_out:
+            writer = MetricsJsonlWriter(args.metrics_out, registry, collector)
+        if args.dashboard:
+            dash = ConsoleDashboard(registry, title=f"train {args.arch}")
     tenant = None
     if args.power_cap > 0:
         from repro.cluster.job import GovernorJob
 
         tenant = GovernorJob("train", governor, n_ranks=len(jax.devices()),
                              cap_w=args.power_cap)
+        if registry is not None:
+            tenant.attach_obs(registry, tracer, clock=time.monotonic)
     if args.instrument != "off":
         instrument.set_mode(args.instrument)
+        if args.live_events:
+            instrument.enable_events(True)   # fully-manual mesh: events legal
         if args.instrument == "profile":
-            # the governor is one bus subscriber among N (trace recorders,
-            # probes, ... attach beside it without displacing anything)
-            instrument.get_event_bus().subscribe(governor)
+            # the governor is one bus subscriber among N (probes attach
+            # beside it without displacing anything); telemetry hangs off
+            # the governor's recorder slot, not the bus
+            bus = instrument.get_event_bus()
+            bus.subscribe(governor)
 
     em = ElasticMesh(axis_names=("data", "model"))
     mesh = em.build(model_parallel=args.model_parallel)
@@ -122,9 +234,10 @@ def main() -> None:
         if latest is not None:
             skel = jax.tree.map(lambda a: np.zeros(a.shape, a.dtype), state_host)
             start_step, state_host = latest, mgr.load(latest, skel)
-            print(f"[train] resumed from step {latest}")
+            log.info("resumed", step=latest)
 
-    state, step_fn = build(mesh, cfg, opt_cfg, state_host)
+    builder = build_live if args.live_events else build
+    state, step_fn = builder(mesh, cfg, opt_cfg, state_host)
     loader = DataLoader(cfg, batch=args.batch, seq_len=args.seq, seed=args.seed)
 
     t_start = time.time()
@@ -145,20 +258,39 @@ def main() -> None:
                 if mgr and step % args.save_every == 0:
                     mgr.save(step, jax.device_get(state))
                 if step % max(1, args.steps // 20) == 0 or step == args.steps:
-                    print(
-                        f"[train] step {step:5d} loss={float(metrics['loss']):.4f} "
-                        f"gnorm={float(metrics['grad_norm']):.3f} "
-                        f"lr={float(metrics['lr']):.2e} "
-                        f"({(time.time() - t_start) / max(step - start_step, 1):.2f}s/step)",
-                        flush=True,
+                    log.info(
+                        "step", step=step, loss=float(metrics["loss"]),
+                        grad_norm=float(metrics["grad_norm"]),
+                        lr=float(metrics["lr"]),
+                        s_per_step=(time.time() - t_start)
+                        / max(step - start_step, 1),
                     )
+                    stats = collector.collect() if collector is not None else None
                     if tenant is not None:
-                        er = tenant.run_epoch(args.power_cap)
-                        print(f"[power] cap={er.cap_w:.1f}W draw={er.power_w:.1f}W "
-                              f"exploited={100 * er.exploited_ratio:.1f}% "
-                              f"({er.n_calls} phases)", flush=True)
+                        # hand the collector's poll over: the governor keeps
+                        # one snapshot mark, so tenant + collector must share
+                        # a single interval stream
+                        er = tenant.run_epoch(args.power_cap, stats=stats)
+                        log.info("power", cap_w=er.cap_w, draw_w=er.power_w,
+                                 exploited_pct=100 * er.exploited_ratio,
+                                 phases=er.n_calls)
+                    if tracer is not None and stats is not None:
+                        tnow = time.monotonic()
+                        busy = max(stats.busy, 1e-30)
+                        tracer.sample("governor", "slack_ratio_pct", tnow,
+                                      100.0 * stats.slack / busy)
+                        tracer.sample("governor", "overlap_ratio_pct", tnow,
+                                      100.0 * stats.overlap / busy)
+                        saving = registry.get_value("governor_energy_saving_pct")
+                        tracer.sample("governor", "energy_saving_pct", tnow,
+                                      saving or 0.0)
+                    if writer is not None:
+                        writer.write(step=step)
+                    if dash is not None:
+                        dash.tick(step=step)
         if failed_device is not None:
-            print(f"[train] step {step}: device {failed_device} FAILED; re-meshing")
+            log.warning("device_failed", step=step, device=failed_device,
+                        action="re-meshing")
             jax.block_until_ready(state)            # drain in-flight work
             em.fail(failed_device)
             if mgr is None:
@@ -177,35 +309,56 @@ def main() -> None:
                 )
                 state_host = mgr.load(latest, skel)
             mesh = em.build(model_parallel=args.model_parallel)
-            state, step_fn = build(mesh, cfg, opt_cfg, state_host)
+            state, step_fn = builder(mesh, cfg, opt_cfg, state_host)
             step = latest
-            print(f"[train] resumed on {len(em.healthy_devices())} devices "
-                  f"from step {latest}")
+            log.info("resumed", devices=len(em.healthy_devices()), step=latest)
     loader.close()
     if args.instrument == "profile":
         rep = governor.finalize()
-        print(f"[governor] calls={rep.n_calls} downshifts={rep.n_downshifts} "
-              f"slack={rep.total_slack:.4f}s exploited={rep.exploited_slack:.4f}s "
-              f"overlap={rep.total_overlap:.4f}s "
-              f"energy_saving={rep.energy_saving_pct:.2f}% "
-              f"stragglers={rep.stragglers}")
+        log.info("governor", calls=rep.n_calls, downshifts=rep.n_downshifts,
+                 slack_s=rep.total_slack, exploited_s=rep.exploited_slack,
+                 overlap_s=rep.total_overlap,
+                 energy_saving_pct=rep.energy_saving_pct,
+                 stragglers=rep.stragglers)
         if governor.tuner is not None:
             thetas = sorted(governor.tuner.summary().values())
-            print(f"[governor] theta auto: {rep.n_theta_decisions} decisions, "
-                  f"{len(thetas)} sites, theta_eff "
-                  f"{thetas[0] * 1e6:.0f}-{thetas[-1] * 1e6:.0f} us"
-                  if thetas else "[governor] theta auto: no sites observed")
+            if thetas:
+                log.info("theta_auto", decisions=rep.n_theta_decisions,
+                         sites=len(thetas), theta_lo_us=thetas[0] * 1e6,
+                         theta_hi_us=thetas[-1] * 1e6)
+            else:
+                log.info("theta_auto", sites=0)
     if tenant is not None:
-        print(f"[power] job total: {tenant.total_energy_j:.1f}J over "
-              f"{tenant.total_wall_s:.1f}s, cap commits "
-              f"{len(tenant.actuator.commits)} (suppressed {tenant.actuator.n_suppressed})")
-    if recorder is not None:
+        log.info("power_total", energy_j=tenant.total_energy_j,
+                 wall_s=tenant.total_wall_s,
+                 cap_commits=len(tenant.actuator.commits),
+                 suppressed=tenant.actuator.n_suppressed)
+    if writer is not None:
+        # one terminal snapshot: the acceptance contract is that this
+        # line's embedded report equals the run's final GovernorReport
+        writer.write(step=step)
+        writer.close()
+        log.info("metrics_out", path=args.metrics_out, lines=writer.n_lines)
+    if dash is not None:
+        dash.tick(step=step)
+    if tracer is not None:
+        tracer.ingest_governor(governor)    # spine-log actuations, once
+        path = tracer.save(args.perfetto_out)
+        log.info("perfetto_out", path=path, events=tracer.n_seen,
+                 dropped=tracer.n_dropped)
+    if recorder is not None and args.trace_out:
+        trace_rec = recorder.children[0] if hasattr(recorder, "children") \
+            else recorder
         if args.instrument == "profile":
-            recorder.meta["report"] = rep.to_dict()
-        path = recorder.save(args.trace_out)
-        print(f"[trace] {recorder.n_seen} records ({recorder.n_dropped} dropped) -> {path}")
+            trace_rec.meta["report"] = rep.to_dict()
+        path = trace_rec.save(args.trace_out)
+        log.info("trace_out", records=trace_rec.n_seen,
+                 dropped=trace_rec.n_dropped, path=path)
     instrument.set_mode("off")
-    instrument.get_event_bus().unsubscribe(governor)
+    if args.live_events:
+        instrument.enable_events(False)
+    bus = instrument.get_event_bus()
+    bus.unsubscribe(governor)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,40 @@
+"""repro.obs — unified telemetry: metrics registry, Perfetto span tracing,
+exporters/dashboards, and the structured driver logger.
+
+Submodules are imported lazily (PEP 562) so that pulling one cheap piece
+(``repro.obs.log`` in a driver, say) does not pay for the rest.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "MetricsRegistry": ("repro.obs.metrics", "MetricsRegistry"),
+    "BusMetrics": ("repro.obs.metrics", "BusMetrics"),
+    "GovernorCollector": ("repro.obs.metrics", "GovernorCollector"),
+    "DEFAULT_EDGES": ("repro.obs.metrics", "DEFAULT_EDGES"),
+    "SpanTracer": ("repro.obs.tracer", "SpanTracer"),
+    "GovernorTap": ("repro.obs.tracer", "GovernorTap"),
+    "RecorderFanout": ("repro.obs.tracer", "RecorderFanout"),
+    "validate_trace": ("repro.obs.tracer", "validate_trace"),
+    "MetricsJsonlWriter": ("repro.obs.export", "MetricsJsonlWriter"),
+    "validate_metrics_jsonl": ("repro.obs.export", "validate_metrics_jsonl"),
+    "prometheus_text": ("repro.obs.export", "prometheus_text"),
+    "ConsoleDashboard": ("repro.obs.export", "ConsoleDashboard"),
+    "get_logger": ("repro.obs.log", "get_logger"),
+    "configure": ("repro.obs.log", "configure"),
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -176,6 +176,9 @@ class ContinuousEngine:
     page: int = 16
     num_pages: Optional[int] = None
     temperature: float = 0.0
+    # optional repro.obs.tracer.SpanTracer (duck-typed: .serve_event):
+    # batch join/evict instants land on the trace's serve track
+    tracer: Any = None
 
     def __post_init__(self):
         self.pool = PagedKVPool(
@@ -236,6 +239,8 @@ class ContinuousEngine:
             slo.on_finish(req, now)
         else:
             req.t_done = now
+        if self.tracer is not None:
+            self.tracer.serve_event("evict", now, req.rid, req.slot)
         self._table[req.slot] = SCRATCH_PAGE
         self._tokens[req.slot] = 0
         self._lengths[req.slot] = 0
@@ -279,6 +284,8 @@ class ContinuousEngine:
             for req in sched.admit(now):
                 self._join_request(req)
                 tnow = time.monotonic() - t_start
+                if self.tracer is not None:
+                    self.tracer.serve_event("join", tnow, req.rid, req.slot)
                 if slo is not None:
                     slo.on_first_token(req, tnow)
                 else:

@@ -71,6 +71,29 @@ class SLOTracker:
             out["tpot"]["violations"] = sum(t > self.tpot_target for t in self.tpot)
         return out
 
+    def export_metrics(self, registry) -> None:
+        """Publish the percentile summary into a :class:`repro.obs.metrics.
+        MetricsRegistry` (``serve_ttft_seconds{q=...}`` and friends) — the
+        dashboard and JSONL snapshot view of this tracker."""
+        s = self.summary()
+        for metric, name in (("ttft", "serve_ttft_seconds"),
+                             ("tpot", "serve_tpot_seconds")):
+            fam = registry.gauge(name, f"{metric} summary over the run", ("q",))
+            for q in ("mean", "p50", "p95", "p99"):
+                fam.labels(q).set(s[metric][q])
+            target = s[metric].get("target")
+            if target is not None:
+                registry.gauge(f"serve_{metric}_target_seconds",
+                               f"{metric} SLO target").set(target)
+                registry.gauge(f"serve_{metric}_violations",
+                               f"samples over the {metric} target").set(
+                                   s[metric]["violations"])
+        done = registry.counter("serve_completed_total",
+                                "requests completed").labels()
+        delta = s["completed"] - done.value
+        if delta > 0:
+            done.inc(delta)
+
     # ---- admission feedback ---------------------------------------------
     def max_concurrency(self, n_slots: int) -> int:
         """AIMD-style cap: shrink when recent p95 TPOT > target, regrow
