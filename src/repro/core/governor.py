@@ -51,7 +51,9 @@ import threading
 from dataclasses import dataclass
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
-from repro.core.events import PhaseRecord
+import numpy as np
+
+from repro.core.events import PHASE_NAMES, EventBatch, PhaseRecord
 from repro.core.policies import COUNTDOWN_SLACK, Policy
 from repro.core.pstate import DEFAULT_HW, HwModel
 from repro.core.timeout import ThetaDecision, ThetaTuner
@@ -98,6 +100,162 @@ class CallRecord:
     def __repr__(self) -> str:   # debugging aid for ring inspection
         return (f"CallRecord(call_id={self.call_id}, ranks={len(self.enter)}, "
                 f"site={self.site})")
+
+
+_EMPTY_I = np.empty(0, dtype=np.int64)
+_EMPTY_F = np.empty(0, dtype=np.float64)
+
+
+class _Tail:
+    """Columnar in-flight occurrence state under the batched path.
+
+    The per-event path keeps one :class:`CallRecord` (four dicts) per
+    in-flight call id; materializing those dicts per batch would put a
+    Python loop right back on the hot path.  The batched engine instead
+    carries the open tail of each call id as per-class ``(rank, t)``
+    column pairs — array views cut from the batch, in first-write
+    (insertion) order with last-write values, exactly the dict contents.
+    A tail converts to/from a :class:`CallRecord` losslessly at the
+    per-event/batched seams (a stray ``sink()`` call, ``finalize``).
+    """
+
+    __slots__ = ("e_rk", "e_t", "s_rk", "s_t", "c_rk", "c_t",
+                 "d_rk", "d_t", "observed", "_seen")
+
+    def __init__(self, e_rk=_EMPTY_I, e_t=_EMPTY_F, s_rk=_EMPTY_I,
+                 s_t=_EMPTY_F, c_rk=_EMPTY_I, c_t=_EMPTY_F,
+                 d_rk=_EMPTY_I, d_t=_EMPTY_F, observed: int = 0):
+        self.e_rk, self.e_t = e_rk, e_t
+        self.s_rk, self.s_t = s_rk, s_t
+        self.c_rk, self.c_t = c_rk, c_t
+        self.d_rk, self.d_t = d_rk, d_t
+        self.observed = observed
+        self._seen = None
+
+    @property
+    def seen(self) -> set:
+        """Ranks in enter ∪ dispatch — the rotation rule's membership set."""
+        s = self._seen
+        if s is None:
+            s = set(self.e_rk.tolist())
+            s.update(self.d_rk.tolist())
+            self._seen = s
+        return s
+
+    @staticmethod
+    def from_record(rec: CallRecord) -> "_Tail":
+        def cols(d: Dict[int, float]):
+            if not d:
+                return _EMPTY_I, _EMPTY_F
+            return (np.fromiter(d.keys(), np.int64, len(d)),
+                    np.fromiter(d.values(), np.float64, len(d)))
+
+        e_rk, e_t = cols(rec.enter)
+        s_rk, s_t = cols(rec.slack_end)
+        c_rk, c_t = cols(rec.copy_end)
+        d_rk, d_t = cols(rec.dispatch)
+        return _Tail(e_rk, e_t, s_rk, s_t, c_rk, c_t, d_rk, d_t, rec.observed)
+
+    def to_record(self, call_id: int) -> CallRecord:
+        rec = CallRecord(call_id)
+        rec.enter = dict(zip(self.e_rk.tolist(), self.e_t.tolist()))
+        rec.slack_end = dict(zip(self.s_rk.tolist(), self.s_t.tolist()))
+        rec.copy_end = dict(zip(self.c_rk.tolist(), self.c_t.tolist()))
+        rec.dispatch = dict(zip(self.d_rk.tolist(), self.d_t.tolist()))
+        rec.observed = self.observed
+        return rec
+
+
+class _ActBlock(NamedTuple):
+    """One batch's qualifying actuation pairs, columnar, appended to the
+    lazy spine log whole (expanding per pair would put a Python loop back
+    on the batch path; :attr:`Governor.actuation_log` expands on read)."""
+
+    t: np.ndarray
+    rank: np.ndarray
+    call_id: np.ndarray
+    slack: np.ndarray
+
+
+class RetiredBlock:
+    """One batch's retired occurrences, columnar — the batch analogue of
+    the sequence of :class:`CallRecord` values the per-event path would
+    have retired, in the identical retirement order.
+
+    Row arrays hold the *accounting view* (one row per entered rank, in
+    per-record dict-insertion order; ``row_off[i]:row_off[i+1]`` is
+    record ``i``): rank, enter/slack-end/copy-end/dispatch times (NaN
+    when the phase is missing).  The class arrays hold the *full* per-
+    class ``(rank, t)`` entries (exit-only ranks included) for lossless
+    :meth:`record` materialization, which the retention ring and any
+    debugging consumer use.  Everything is a view onto the batch-sized
+    working arrays: building a block costs object construction, not
+    copies.
+    """
+
+    __slots__ = ("n", "cids", "observed", "n_enter", "sid_of_rid",
+                 "row_rid", "row_rank", "row_t0", "row_t1", "row_t2",
+                 "row_td", "row_off", "classes")
+
+    def __init__(self, n, cids, observed, n_enter, sid_of_rid,
+                 row_rid, row_rank, row_t0, row_t1, row_t2, row_td,
+                 row_off, classes):
+        self.n = n
+        self.cids = cids
+        self.observed = observed
+        self.n_enter = n_enter
+        self.sid_of_rid = sid_of_rid
+        self.row_rid = row_rid
+        self.row_rank = row_rank
+        self.row_t0 = row_t0
+        self.row_t1 = row_t1
+        self.row_t2 = row_t2
+        self.row_td = row_td
+        self.row_off = row_off
+        self.classes = classes       # name -> (sid, rank, t, pos) key-sorted
+
+    def __len__(self) -> int:
+        return self.n
+
+    def class_counts(self, name: str) -> np.ndarray:
+        """Per-record entry count of one phase class (len ``n``)."""
+        sid_arr = self.classes[name][0]
+        counts = np.zeros(self.n, dtype=np.int64)
+        if sid_arr.size:
+            lo = np.searchsorted(sid_arr, self.sid_of_rid, side="left")
+            hi = np.searchsorted(sid_arr, self.sid_of_rid, side="right")
+            counts = hi - lo
+        return counts
+
+    def wait_counts(self) -> np.ndarray:
+        """Per-record count of entered ranks that also dispatched (the
+        async pairs — ``wait_enter`` rows in the 5-phase taxonomy)."""
+        if self.row_rid.size == 0:
+            return np.zeros(self.n, dtype=np.int64)
+        return np.bincount(self.row_rid[~np.isnan(self.row_td)],
+                           minlength=self.n)
+
+    def record(self, i: int) -> CallRecord:
+        """Materialize retired occurrence ``i`` as a :class:`CallRecord`
+        (cold path: the ring/debug view)."""
+        rec = CallRecord(int(self.cids[i]))
+        sid = int(self.sid_of_rid[i])
+        for name, target in (("enter", "enter"), ("slack", "slack_end"),
+                             ("copy", "copy_end"), ("dispatch", "dispatch")):
+            sid_arr, rank_arr, t_arr, pos_arr = self.classes[name]
+            lo = np.searchsorted(sid_arr, sid, side="left")
+            hi = np.searchsorted(sid_arr, sid, side="right")
+            if hi > lo:
+                o = np.argsort(pos_arr[lo:hi], kind="stable")
+                setattr(rec, target,
+                        dict(zip(rank_arr[lo:hi][o].tolist(),
+                                 t_arr[lo:hi][o].tolist())))
+        rec.observed = int(self.observed[i])
+        return rec
+
+    def records(self):
+        for i in range(self.n):
+            yield self.record(i)
 
 
 class _Accum:
@@ -243,6 +401,7 @@ class Governor:
         self._rec_theta = getattr(recorder, "on_theta", None)
         self._rec_pair = getattr(recorder, "on_actuation_pair", None)
         self._rec_retire = getattr(recorder, "on_retired", None)
+        self._rec_retire_batch = getattr(recorder, "on_retired_batch", None)
         if tuner is None and policy.theta_mode == "adaptive":
             tuner = ThetaTuner(hw=hw, theta0=policy.theta)
         self.tuner = tuner
@@ -329,7 +488,18 @@ class Governor:
         if raw:
             with self._lock:
                 log = self._act_log
-                for t, rank, call_id, slack in raw:
+                for entry in raw:
+                    if type(entry) is _ActBlock:
+                        # batched spine block: expand in stream order
+                        for t, rank, call_id, slack in zip(
+                                entry.t.tolist(), entry.rank.tolist(),
+                                entry.call_id.tolist(), entry.slack.tolist()):
+                            log.append(Actuation(t, rank, "set_pstate_min",
+                                                 call_id, slack))
+                            log.append(Actuation(t, rank, "restore_pstate_max",
+                                                 call_id, slack))
+                        continue
+                    t, rank, call_id, slack = entry
                     log.append(Actuation(t, rank, "set_pstate_min", call_id, slack))
                     log.append(Actuation(t, rank, "restore_pstate_max", call_id, slack))
                 raw.clear()
@@ -499,6 +669,11 @@ class Governor:
             if rec is None:
                 rec = CallRecord(call_id)
                 calls[call_id] = rec
+            elif rec.__class__ is not CallRecord:
+                # in-flight tail left columnar by the batched path: a
+                # per-event producer is cutting in — materialize once
+                rec = rec.to_record(call_id)
+                calls[call_id] = rec
             if phase == "barrier_enter":
                 if rank in rec.enter or rank in rec.dispatch:
                     self._retire(rec)                   # new occurrence
@@ -536,6 +711,682 @@ class Governor:
                 rec.enter[rank] = t                     # slack starts at the wait
 
     on_event = sink          # canonical EventBus subscriber method
+
+    # batched ingest ------------------------------------------------------------
+    def on_batch(self, batch: EventBatch) -> None:
+        """Consume one columnar event chunk (the EventBus ``publish_batch``
+        consumer) — observably identical to feeding the same events through
+        :meth:`sink` one at a time, bit for bit: reports, snapshots,
+        actuation log, straggler state and the retention ring all match.
+
+        The vectorized fast path folds the chunk with numpy in the exact
+        float-addition order of the per-event path (``np.add.accumulate``
+        is a strictly sequential left fold, so prepending the running
+        accumulator replays the scalar ``+=`` chain).  It engages when
+        nothing needs per-event callbacks: a tuner (sequential per-
+        observation feedback), an ``on_event`` recorder, or an
+        ``on_retired`` recorder without the batch-capable
+        ``on_retired_batch`` hook all fall back to an internal per-event
+        replay — as do pathologically malformed streams (duplicate
+        same-phase events for one rank inside one occurrence), detected
+        *before* any state is touched.
+        """
+        # rank/code keep their narrow dtypes: integer key arithmetic
+        # upcasts where needed, and materialization always goes through
+        # tolist() (python ints) -- no copies on the hot path
+        rk = np.asarray(batch.rank)
+        cd = np.asarray(batch.code)
+        ci = np.asarray(batch.call_id).astype(np.int64, copy=False)
+        ts = np.asarray(batch.t, dtype=np.float64)
+        if rk.shape[0] == 0:
+            return
+        if (self.tuner is not None or self._rec_event is not None
+                or (self._rec_retire is not None
+                    and self._rec_retire_batch is None)):
+            self._sink_loop(rk, cd, ci, ts)
+            return
+        with self._lock:
+            ok = self._batch_fast(rk, cd, ci, ts)
+        if not ok:
+            self._sink_loop(rk, cd, ci, ts)
+
+    def _sink_loop(self, rk, cd, ci, ts) -> None:
+        """Per-event replay of a chunk: the correctness reference and the
+        fallback for consumers/streams the fast path cannot serve."""
+        names = PHASE_NAMES
+        sink = self.sink
+        for r, c, i, t in zip(rk.tolist(), cd.tolist(), ci.tolist(),
+                              ts.tolist()):
+            sink(r, names.get(c, f"code_{c}"), i, t)
+
+    def _batch_fast(self, rk, cd, ci, ts) -> bool:
+        """Vectorized chunk fold (lock held).  Returns False — with no
+        state touched — when the stream needs the per-event replay.
+
+        The pipeline: group events by call id; find occurrence-rotation
+        boundaries (a rank re-entering — the per-event rule, via a
+        segmented previous-same-rank-write scan); assign every retired
+        segment a global retirement index ordered by its trigger event's
+        stream position; join enter/slack/copy/dispatch per (segment,
+        rank); then fold each accumulator chain with
+        ``np.add.accumulate`` seeded by its running value, padding
+        skipped terms with ``+0.0`` (bitwise identity: the accumulators
+        are non-negative).  Open tails stay columnar in ``_calls`` as
+        :class:`_Tail` views and seed the next chunk's first segments.
+        """
+        n = rk.shape[0]
+        if int(rk.min()) < 0:
+            return False             # negative ranks break the key packing
+        if int(cd.min()) < 0 or int(cd.max()) > 4:
+            return False             # unknown phase codes: replay per-event
+            # (sink() ignores them but still creates the call record)
+        # ---- 1. group by call id (stable sort: stream order within) ----
+        # stable int argsort is a byte-wise LSD radix sort, so shifting the
+        # ids into the narrowest unsigned dtype that holds their span cuts
+        # radix passes; the order (hence the bitwise fold) is unchanged
+        cmin, cmax = int(ci.min()), int(ci.max())
+        span = cmax - cmin + 1
+        if span <= 256:
+            ord_c = (ci - cmin).astype(np.uint8).argsort(kind="stable")
+        elif span <= 65536:
+            ord_c = (ci - cmin).astype(np.uint16).argsort(kind="stable")
+        elif -2 ** 31 <= cmin and cmax < 2 ** 31:
+            ord_c = ci.astype(np.int32).argsort(kind="stable")
+        else:
+            ord_c = ci.argsort(kind="stable")
+        ci_s = ci[ord_c]
+        new_g = np.empty(n, dtype=bool)
+        new_g[0] = True
+        np.not_equal(ci_s[1:], ci_s[:-1], out=new_g[1:])
+        gstart = np.nonzero(new_g)[0]
+        n_groups = gstart.shape[0]
+        gcids = ci_s[gstart]
+        # group indices fit int32 (a chunk is memory-bounded far below
+        # 2^31 events) — and int32 keys halve the radix sorts below
+        gidx_s = np.cumsum(new_g, dtype=np.int32)
+        gidx_s -= 1
+        gidx = np.empty(n, dtype=np.int32)
+        gidx[ord_c] = gidx_s
+        gcids_l = gcids.tolist()
+        calls = self._calls
+        tails: List[Optional[_Tail]] = []
+        for c in gcids_l:
+            tl = calls.get(c)
+            if tl is not None and tl.__class__ is CallRecord:
+                tl = _Tail.from_record(tl)   # pure: not written back unless
+                tails.append(tl)             # the batch commits
+            else:
+                tails.append(tl)
+        carried = [(g, tl) for g, tl in enumerate(tails) if tl is not None]
+        # the (segment, rank) packing key must cover carried-in ranks too —
+        # a chunk touching only low ranks can inherit a tail from a wider one
+        R = int(rk.max()) + 1
+        if carried:
+            c_rks = [a for _, tl in carried
+                     for a in (tl.e_rk, tl.s_rk, tl.c_rk, tl.d_rk) if a.size]
+            if c_rks:
+                all_c = np.concatenate(c_rks)
+                if int(all_c.min()) < 0:
+                    return False
+                hi = int(all_c.max()) + 1
+                if hi > R:
+                    R = hi
+        # ---- 2. previous same-(group, rank) write (codes 0/3/4) ----
+        # writes = events that put the rank into enter/dispatch (the
+        # rotation rule's membership); only they need sorting, and a
+        # write's predecessor within its (group, rank) run is simply the
+        # previous element
+        # integer index lists beat boolean-mask gathers ~6x here: a mask
+        # gather rescans all n elements per column, nonzero pays that once
+        w_idx = np.nonzero((cd == 0) | (cd >= 3))[0]
+        w_pos = w_idx                  # pos is arange(n): pos[w_idx] == w_idx
+        w_gi = gidx[w_idx]
+        w_rk = rk[w_idx]
+        if n_groups * R <= 65536:
+            w_key = (w_gi * R
+                     + w_rk.astype(np.int32, copy=False)).astype(np.uint16)
+        elif n_groups * R < 2 ** 31:
+            w_key = w_gi * R + w_rk.astype(np.int32, copy=False)
+        else:
+            w_key = w_gi.astype(np.int64) * R + w_rk
+        nw = w_pos.shape[0]
+        prev_w = np.empty(nw, dtype=np.int64)
+        if nw:
+            ow = w_key.argsort(kind="stable")
+            k_s = w_key[ow]
+            run_start = np.empty(nw, dtype=bool)
+            run_start[0] = True
+            np.not_equal(k_s[1:], k_s[:-1], out=run_start[1:])
+            prev_s = np.empty(nw, dtype=np.int64)
+            prev_s[0] = -1
+            prev_s[1:] = w_pos[ow][:-1]
+            prev_s[run_start] = -1
+            prev_w[ow] = prev_s
+        # ---- 3. boundary scan: rotations, per group in stream order ----
+        w_cd = cd[w_idx]
+        t_idx = np.nonzero(w_cd != 4)[0]     # codes 0 and 3 trigger rotation
+        trig_g = w_gi[t_idx]
+        if n_groups <= 256:
+            t_ord = trig_g.astype(np.uint8).argsort(kind="stable")
+        elif n_groups <= 65536:
+            t_ord = trig_g.astype(np.uint16).argsort(kind="stable")
+        else:
+            t_ord = trig_g.argsort(kind="stable")
+        tio = t_idx[t_ord]
+        tg = trig_g[t_ord]
+        t_lo = tg.searchsorted(np.arange(n_groups, dtype=np.int32))
+        t_hi = np.append(t_lo[1:], tg.shape[0])
+        tp_arr = w_pos[tio]
+        tv_arr = prev_w[tio]
+        tr_arr = w_rk[tio]
+        t_lo_l, t_hi_l = t_lo.tolist(), t_hi.tolist()
+        # A group whose trigger prev-write sequence is non-decreasing admits
+        # a searchsorted boundary chain: the next boundary after seg_start
+        # is the first trigger with prev >= seg_start, so the walk costs one
+        # step per *boundary* instead of one per *trigger*.  Real streams
+        # (ranks re-entering in a stable order) are monotone; anything else
+        # drops to the literal per-trigger scan for that group.
+        nonmono = np.zeros(n_groups, dtype=bool)
+        any_nonmono = False
+        if tv_arr.shape[0] > 1:
+            bad = (tv_arr[1:] < tv_arr[:-1]) & (tg[1:] == tg[:-1])
+            if bad.any():
+                nonmono[tg[1:][bad]] = True
+                any_nonmono = True
+        if not any_nonmono and tg.shape[0]:
+            # every group monotone: the chain of boundaries is pointer
+            # jumping through "first trigger with prev >= p" successors,
+            # and every group's chain advances in lockstep — one
+            # vectorized searchsorted per *wave* (the w-th boundary of
+            # every still-active group) over (group, prev)-packed keys,
+            # so the walk costs O(max boundaries per group) searchsorteds
+            # instead of one successor per trigger.  Keys partition by
+            # group, so a miss lands at/after the next group's run and
+            # the "< t_hi" liveness test simply retires the group.
+            big2 = n + 1
+            small_tv = n_groups * big2 < 2 ** 31
+            if small_tv:
+                kg = tg * np.int32(big2)
+                key_tv = kg + (tv_arr + 1).astype(np.int32)
+                j_cur = key_tv.searchsorted(
+                    np.arange(n_groups, dtype=np.int32) * np.int32(big2) + 1)
+            else:
+                kg = tg.astype(np.int64) * big2
+                key_tv = kg + (tv_arr + 1)
+                j_cur = key_tv.searchsorted(
+                    np.arange(n_groups, dtype=np.int64) * big2 + 1)
+            if carried:
+                # a pre-boundary trigger with no in-chunk prev still
+                # rotates if its rank lives in the carried tail
+                j_l = j_cur.tolist()
+                for g, tl in carried:
+                    lo, j = t_lo_l[g], j_l[g]
+                    if j > lo:
+                        seen = tl.seen
+                        for jj in range(lo, j):
+                            if int(tr_arr[jj]) in seen:
+                                j_cur[g] = jj
+                                break
+            wave_g: List[np.ndarray] = []
+            wave_p: List[np.ndarray] = []
+            alive = np.nonzero(j_cur < t_hi)[0]
+            while alive.size:
+                j = j_cur[alive]
+                p = tp_arr[j]                # strictly ascending per group:
+                wave_g.append(alive)         # prev(j) < pos(j), so the
+                wave_p.append(p)             # successor is always beyond j
+                if small_tv:
+                    nxt = key_tv.searchsorted(
+                        kg[j] + (p + 1).astype(np.int32))
+                else:
+                    nxt = key_tv.searchsorted(kg[j] + (p + 1))
+                j_cur[alive] = nxt
+                alive = alive[nxt < t_hi[alive]]
+            if wave_g:
+                all_g = np.concatenate(wave_g)
+                all_p = np.concatenate(wave_p)
+                m = all_g.shape[0]
+                nb_g = np.bincount(all_g, minlength=n_groups)
+                # group-major boundary order == per-group chain order
+                # (stable sort keeps the ascending wave order per group)
+                if n_groups <= 256:
+                    gor = all_g.astype(np.uint8).argsort(kind="stable")
+                elif n_groups <= 65536:
+                    gor = all_g.astype(np.uint16).argsort(kind="stable")
+                else:
+                    gor = all_g.argsort(kind="stable")
+                sg_sorted = all_g[gor]
+                p_sorted = all_p[gor]
+            else:
+                m = 0
+                nb_g = np.zeros(n_groups, dtype=np.int64)
+                sg_sorted = p_sorted = _EMPTY_I
+            seg_cnt = nb_g + 1
+            grp_lo_arr = np.zeros(n_groups + 1, dtype=np.int64)
+            np.cumsum(seg_cnt, out=grp_lo_arr[1:])
+            n_segs = int(grp_lo_arr[-1])
+            seg_g = np.repeat(np.arange(n_groups, dtype=np.int64), seg_cnt)
+            sp_arr = np.full(n_segs, -1, dtype=np.int64)
+            if m:
+                nb_lo = np.zeros(n_groups, dtype=np.int64)
+                np.cumsum(nb_g[:-1], out=nb_lo[1:])
+                # boundary w of group g retires segment grp_lo[g] + w and
+                # opens grp_lo[g] + w + 1 at the trigger position
+                rs_arr = (grp_lo_arr[sg_sorted]
+                          + np.arange(m, dtype=np.int64) - nb_lo[sg_sorted])
+                sp_arr[rs_arr + 1] = p_sorted
+                rp_arr = p_sorted
+            else:
+                rs_arr = rp_arr = _EMPTY_I
+            grp_seg_lo = grp_lo_arr.tolist()
+        else:
+            nonmono_l = nonmono.tolist()
+            seg_gidx: List[int] = []
+            seg_sp: List[int] = []           # segment start pos (-1: head)
+            grp_seg_lo = [0] * (n_groups + 1)
+            ret_pos: List[int] = []          # trigger pos per retired segment
+            ret_seg: List[int] = []
+            sg_append, sp_append = seg_gidx.append, seg_sp.append
+            rp_append, rs_append = ret_pos.append, ret_seg.append
+            for g in range(n_groups):
+                grp_seg_lo[g] = len(seg_gidx)
+                sg_append(g)
+                sp_append(-1)
+                tl = tails[g]
+                carry_active = tl is not None
+                lo, hi = t_lo_l[g], t_hi_l[g]
+                if lo == hi:
+                    continue
+                if nonmono_l[g]:
+                    seen = None              # built lazily: only a carried
+                    seg_start = 0            # group's pre-boundary triggers
+                    for j in range(lo, hi):  # consult it
+                        pv = tv_arr[j]
+                        if pv < seg_start:
+                            if not carry_active:
+                                continue
+                            if seen is None:
+                                seen = tl.seen
+                            if int(tr_arr[j]) not in seen:
+                                continue
+                        p = int(tp_arr[j])
+                        rp_append(p)
+                        rs_append(len(seg_gidx) - 1)
+                        sg_append(g)
+                        sp_append(p)
+                        seg_start = p
+                        carry_active = False
+                    continue
+                # per-group successor table: if trigger j rotates at pos
+                # p, the next boundary is the first trigger with
+                # prev >= p -- then the chain is pure pointer jumping
+                tvg = tv_arr[lo:hi]
+                nxt_g = (tvg.searchsorted(tp_arr[lo:hi]) + lo).tolist()
+                j = int(tvg.searchsorted(0)) + lo
+                if carry_active and j > lo:
+                    # a pre-boundary trigger with no in-chunk prev still
+                    # rotates if its rank lives in the carried tail
+                    seen = tl.seen
+                    for jj in range(lo, j):
+                        if int(tr_arr[jj]) in seen:
+                            j = jj
+                            break
+                while j < hi:
+                    p = int(tp_arr[j])
+                    rp_append(p)
+                    rs_append(len(seg_gidx) - 1)
+                    sg_append(g)
+                    sp_append(p)
+                    j = nxt_g[j - lo]
+            grp_seg_lo[n_groups] = len(seg_gidx)
+            seg_g = np.asarray(seg_gidx, dtype=np.int64)
+            n_segs = seg_g.shape[0]
+            sp_arr = np.asarray(seg_sp, dtype=np.int64)
+            m = len(ret_pos)
+            rp_arr = np.asarray(ret_pos, dtype=np.int64)
+            rs_arr = np.asarray(ret_seg, dtype=np.int64)
+        # event -> segment in O(n): segments are emitted in (group, pos)
+        # order and group-sorted events are pos-ordered within each group,
+        # so each segment covers a contiguous run starting at its trigger's
+        # group-sorted index (group head: the group's first event).  The
+        # (group-major, pos-ascending) key over sorted events is strictly
+        # monotone, so the few boundary lookups are binary searches
+        # instead of a full inverse-permutation scatter.
+        head = sp_arr < 0
+        seg_start_ix = np.empty(n_segs, dtype=np.int64)
+        seg_start_ix[head] = gstart
+        kq = gidx_s.astype(np.int64) * n + ord_c
+        nh = ~head
+        seg_start_ix[nh] = kq.searchsorted(seg_g[nh] * n + sp_arr[nh])
+        counts = np.diff(np.append(seg_start_ix, n))
+        sid = np.empty(n, dtype=np.int64)
+        sid[ord_c] = np.repeat(np.arange(n_segs, dtype=np.int64), counts)
+        # ---- 4. retirement order: global trigger-position order ----
+        rid_of_seg = np.full(n_segs, -1, dtype=np.int64)
+        if m:
+            rp = rp_arr.astype(np.int32, copy=False)   # positions < n
+            rorder = rp.argsort(kind="stable")
+            sid_of_rid = rs_arr[rorder]
+            rid_of_seg[sid_of_rid] = np.arange(m, dtype=np.int64)
+        else:
+            sid_of_rid = _EMPTY_I
+        # ---- 5. per-class (segment, rank) tables, carry first ----
+        if carried:
+            base_sids = np.asarray([grp_seg_lo[g] for g, _ in carried],
+                                   dtype=np.int64)
+
+        def carry_cols(attr_rk, attr_t):
+            """Concatenate one class across every carried tail: sids by
+            repeat, positions ``-k..-1`` per tail (before any batch event
+            under the stable keysort) via one arange minus group ends."""
+            if not carried:
+                return None
+            rks = [getattr(tl, attr_rk) for _, tl in carried]
+            cnt = np.asarray([a.shape[0] for a in rks], dtype=np.int64)
+            tot = int(cnt.sum())
+            if tot == 0:
+                return None
+            s = np.repeat(base_sids, cnt)
+            r = np.concatenate(rks)
+            t = np.concatenate([getattr(tl, attr_t) for _, tl in carried])
+            p = (np.arange(tot, dtype=np.int64)
+                 - np.repeat(np.cumsum(cnt), cnt))
+            return s, r, t, p
+
+        small_key = n_segs * R < 2 ** 31
+        if small_key:
+            sid_k = sid.astype(np.int32)
+            rk_k = rk.astype(np.int32, copy=False)
+        else:
+            sid_k, rk_k = sid, rk
+        key_u16 = n_segs * R <= 65536
+
+        def cls_table(idx, carry):
+            ev_key = sid_k[idx] * R + rk_k[idx]
+            if carry is not None:
+                cs, cr, ct2, cp2 = carry
+                s = np.concatenate((cs, sid[idx]))
+                r = np.concatenate((cr, rk[idx]))
+                t = np.concatenate((ct2, ts[idx]))
+                p = np.concatenate((cp2, idx))
+                c_key = cs * R + cr
+                key = np.concatenate(
+                    (c_key.astype(ev_key.dtype, copy=False), ev_key))
+            else:
+                s, r, t, p = sid[idx], rk[idx], ts[idx], idx
+                key = ev_key
+            if key_u16:
+                o = key.astype(np.uint16).argsort(kind="stable")
+            else:
+                o = key.argsort(kind="stable")
+            ks = key[o]
+            if ks.shape[0] > 1 and (ks[1:] == ks[:-1]).any():
+                return None          # same-phase duplicate inside one segment
+            return ks, s[o], r[o], t[o], p[o]
+
+        ew = cls_table(np.nonzero((cd == 0) | (cd == 4))[0],
+                       carry_cols("e_rk", "e_t"))
+        s_idx = np.nonzero(cd == 1)[0]
+        sl = cls_table(s_idx, carry_cols("s_rk", "s_t"))
+        cp = cls_table(np.nonzero(cd == 2)[0], carry_cols("c_rk", "c_t"))
+        dp = cls_table(np.nonzero(cd == 3)[0], carry_cols("d_rk", "d_t"))
+        if ew is None or sl is None or cp is None or dp is None:
+            return False
+        # ---------------- point of no return: state mutation below ----------------
+        acc = self._acc
+        acc.n_records += m
+        ek, es, er, et, ep = ew
+        has_disp = np.zeros(n_segs, dtype=bool)
+        if dp[0].size:
+            has_disp[dp[1]] = True
+        observed_base = np.zeros(m, dtype=np.int64) if m else _EMPTY_I
+        if m and carried:
+            obs = np.asarray([tl.observed for _, tl in carried],
+                             dtype=np.int64)
+            rid0 = rid_of_seg[base_sids]
+            omask = (rid0 >= 0) & (obs > 0)
+            observed_base[rid0[omask]] = obs[omask]
+        # rows: one per entered rank of a retired segment, ordered by
+        # (retirement index, dict-insertion position) — the per-event
+        # accumulation sequence, concatenated
+        e_rid = rid_of_seg[es]
+        r_ix = np.nonzero(e_rid >= 0)[0]
+        r_rid = e_rid[r_ix]
+        r_sid = es[r_ix]
+        r_rank = er[r_ix]
+        r_t0 = et[r_ix]
+        r_pos = ep[r_ix]
+        if r_pos.size:
+            shift = max(0, -int(r_pos.min()))
+            rkey_o = r_rid * (n + shift + 1) + (r_pos + shift)
+            if m * (n + shift + 1) < 2 ** 31:
+                rkey_o = rkey_o.astype(np.int32)
+            row_o = rkey_o.argsort(kind="stable")
+            r_rid = r_rid[row_o]
+            r_sid = r_sid[row_o]
+            r_rank = r_rank[row_o]
+            r_t0 = r_t0[row_o]
+            r_pos = r_pos[row_o]
+        n_enter = (np.bincount(r_rid, minlength=m) if m
+                   else np.zeros(0, dtype=np.int64))
+
+        # (segment, rank) keys live in a dense domain < n_segs*R, so when
+        # that domain is about chunk-sized a scatter/gather lookup table
+        # (one write + one read per key) beats per-key binary search
+        lut_ok = small_key and n_segs * R <= 4 * n + 4096
+
+        def join(cls, keys):
+            ks = cls[0]
+            if ks.size == 0 or keys.size == 0:
+                return np.full(keys.shape, np.nan)
+            if lut_ok:
+                lut = np.full(n_segs * R, np.nan)
+                lut[ks] = cls[3]
+                return lut[keys]
+            ix = np.minimum(ks.searchsorted(keys), ks.size - 1)
+            return np.where(ks[ix] == keys, cls[3][ix], np.nan)
+
+        rkey = r_sid * R + r_rank
+        t1 = join(sl, rkey)
+        t2 = join(cp, rkey)
+        td = join(dp, rkey) if dp[0].size else np.full(rkey.shape, np.nan)
+        valid = ~np.isnan(t1)
+        slack = np.where(valid, t1 - r_t0, 0.0)
+        slack = np.where(slack > 0.0, slack, 0.0)
+        copyv = np.where(valid & ~np.isnan(t2), t2 - t1, 0.0)
+        copyv = np.where(copyv > 0.0, copyv, 0.0)
+        if dp[0].size:
+            ovv = np.where(valid & has_disp[r_sid] & ~np.isnan(td),
+                           r_t0 - td, 0.0)
+            ovv = np.where(ovv > 0.0, ovv, 0.0)
+        else:
+            # no dispatches in scope: every overlap term is the +0.0 the
+            # per-event replay would add, and +0.0 is a bitwise identity
+            ovv = _EMPTY_F
+        te_fixed = self._theta_eff.get(self._theta_default)
+        if te_fixed is None:
+            te_fixed = self.hw.theta_eff(self._theta_default)
+            self._theta_eff[self._theta_default] = te_fixed
+        low = slack - te_fixed
+        down = valid & (low > 0.0)
+        low = np.where(down, low, 0.0)
+        w_slack_hi, w_slack_lo = self._w_slack_hi, self._w_slack_lo
+        w_copy_hi, w_copy_lo = self._w_copy_hi, self._w_copy_lo
+        nrows = slack.shape[0]
+        eb = np.empty((nrows, 2))
+        eb[:, 0] = w_slack_hi * slack
+        eb[:, 1] = w_copy_hi * copyv
+        ep3 = np.empty((nrows, 3))
+        ep3[:, 0] = w_slack_hi * (slack - low)
+        ep3[:, 1] = w_slack_lo * low
+        if self._scope_comm:
+            ep3[:, 2] = np.where(down, w_copy_lo, w_copy_hi) * copyv
+        else:
+            ep3[:, 2] = w_copy_hi * copyv
+
+        def fold(start: float, terms: np.ndarray) -> float:
+            # ufunc.accumulate is a strictly sequential left fold: this
+            # replays the scalar `+=` chain bit for bit.  It consumes the
+            # (freshly-built, chunk-local) term array: seeding by one
+            # scalar add to the head (IEEE addition commutes bitwise) and
+            # accumulating in place skips an alloc + full copy per fold.
+            if terms.size == 0:
+                return start
+            flat = terms.ravel()
+            flat[0] += start
+            return float(np.add.accumulate(flat, out=flat)[-1])
+
+        busy_t = slack + copyv               # before fold() consumes them
+        acc.overlap = fold(acc.overlap, ovv)
+        acc.slack = fold(acc.slack, slack)
+        acc.copy = fold(acc.copy, copyv)
+        acc.busy = fold(acc.busy, busy_t)
+        acc.e_base = fold(acc.e_base, eb)
+        acc.n_down += int(np.count_nonzero(down))
+        acc.exploited = fold(acc.exploited, low)
+        acc.e_pol = fold(acc.e_pol, ep3)
+        # ---- 6. straggler detector: retired records with new arrivals ----
+        if m:
+            det_rec = (n_enter >= 2) & (n_enter > observed_base)
+            if det_rec.all():
+                # the common shape — every retired record qualifies —
+                # skips the gather entirely
+                off = np.zeros(m + 1, dtype=np.int64)
+                np.cumsum(n_enter, out=off[1:])
+                self.detector.observe_barriers_cols(r_rank, r_t0, off)
+            elif det_rec.any():
+                off = np.zeros(m + 1, dtype=np.int64)
+                np.cumsum(n_enter, out=off[1:])
+                det_rids = np.nonzero(det_rec)[0]
+                counts = n_enter[det_rids]
+                doff = np.zeros(det_rids.size + 1, dtype=np.int64)
+                np.cumsum(counts, out=doff[1:])
+                take = np.concatenate([
+                    np.arange(off[i], off[i] + c) for i, c in
+                    zip(det_rids.tolist(), counts.tolist())
+                ])
+                self.detector.observe_barriers_cols(
+                    r_rank[take], r_t0[take], doff)
+            observed_fin = np.maximum(n_enter, observed_base)
+        else:
+            observed_fin = _EMPTY_I
+        # ---- 7. actuations: qualifying barrier_exit events, stream order ----
+        if self._timeout_armed:
+            a_idx = s_idx                    # the barrier_exit events again
+            a_t = ts[a_idx]
+            if a_t.size:
+                a_sid = sid[a_idx]
+                a_rank = rk[a_idx]
+                a_pos = a_idx                # pos is arange(n)
+                akey = a_sid * R + a_rank
+                if ek.size:
+                    if lut_ok:
+                        et_lut = np.full(n_segs * R, np.nan)
+                        et_lut[ek] = et
+                        ep_lut = np.full(n_segs * R, n, dtype=np.int64)
+                        ep_lut[ek] = ep
+                        fnd = ep_lut[akey] < a_pos
+                        t0a = np.where(fnd, et_lut[akey], a_t)
+                    else:
+                        ix = np.minimum(ek.searchsorted(akey), ek.size - 1)
+                        fnd = (ek[ix] == akey) & (ep[ix] < a_pos)
+                        t0a = np.where(fnd, et[ix], a_t)
+                else:
+                    t0a = a_t
+                slk = a_t - t0a
+                q_ix = np.nonzero(slk >= self._theta_default)[0]
+                nq = q_ix.shape[0]
+                if nq:
+                    self.n_actuations += 2 * nq
+                    rec_pair, rec_act = self._rec_pair, self._rec_act
+                    ring_cap = (None if rec_pair is not None
+                                or rec_act is not None
+                                or type(self._act_raw) is list
+                                else self._act_raw.maxlen)
+                    if ring_cap is not None and nq > ring_cap:
+                        # bounded spine ring: entries past the capacity
+                        # would be evicted on arrival — gather only the
+                        # survivors
+                        q_ix = q_ix[-ring_cap:]
+                    qt = a_t[q_ix]
+                    qr = a_rank[q_ix]
+                    qc = ci[a_idx[q_ix]]
+                    qs = slk[q_ix]
+                    if rec_pair is not None:
+                        raw = self._act_raw
+                        for row in zip(qt.tolist(), qr.tolist(),
+                                       qc.tolist(), qs.tolist()):
+                            raw.append(row)
+                            rec_pair(*row)
+                    elif rec_act is not None:
+                        log = self._act_log
+                        for t_, r_, c_, s_ in zip(qt.tolist(), qr.tolist(),
+                                                  qc.tolist(), qs.tolist()):
+                            pair = (Actuation(t_, r_, "set_pstate_min", c_, s_),
+                                    Actuation(t_, r_, "restore_pstate_max",
+                                              c_, s_))
+                            log.extend(pair)
+                            rec_act(pair[0])
+                            rec_act(pair[1])
+                    elif type(self._act_raw) is list:
+                        self._act_raw.append(_ActBlock(qt, qr, qc, qs))
+                    else:
+                        self._act_raw.extend(zip(qt.tolist(), qr.tolist(),
+                                                 qc.tolist(), qs.tolist()))
+        # ---- 8. ring + batch recorder ----
+        if m:
+            row_off = np.zeros(m + 1, dtype=np.int64)
+            np.cumsum(n_enter, out=row_off[1:])
+            block = RetiredBlock(
+                m, gcids[seg_g[sid_of_rid]], observed_fin, n_enter,
+                sid_of_rid, r_rid, r_rank, r_t0, t1, t2, td, row_off,
+                {"enter": (es, er, et, ep), "slack": sl[1:],
+                 "copy": cp[1:], "dispatch": dp[1:]},
+            )
+            ring = self._ring
+            cap = ring.maxlen
+            start = 0 if cap is None or m <= cap else m - cap
+            for i in range(start, m):
+                ring.append((block, i))
+            if self._rec_retire_batch is not None:
+                self._rec_retire_batch(block)
+        # ---- 9. open tails back into _calls, columnar ----
+        tail_sids = np.asarray([grp_seg_lo[g + 1] - 1 for g in range(n_groups)],
+                               dtype=np.int64)
+        new_tails: List[Optional[_Tail]] = [None] * n_groups
+        cls_cols = []
+        for cls in (ew, sl, cp, dp):
+            c_sid, c_rank, c_t, c_pos = cls[1], cls[2], cls[3], cls[4]
+            t_ix = (np.nonzero(rid_of_seg[c_sid] < 0)[0] if c_sid.size
+                    else _EMPTY_I)
+            t_sid = c_sid[t_ix]
+            t_rank = c_rank[t_ix]
+            t_t = c_t[t_ix]
+            t_pos = c_pos[t_ix]
+            if t_pos.size:
+                shift = max(0, -int(t_pos.min()))
+                tkey = t_sid * (n + shift + 1) + (t_pos + shift)
+                if n_segs * (n + shift + 1) < 2 ** 31:
+                    tkey = tkey.astype(np.int32)
+                o3 = tkey.argsort(kind="stable")
+                t_sid, t_rank, t_t = t_sid[o3], t_rank[o3], t_t[o3]
+            lo = np.searchsorted(t_sid, tail_sids, side="left")
+            hi = np.searchsorted(t_sid, tail_sids, side="right")
+            cls_cols.append((t_rank, t_t, lo.tolist(), hi.tolist()))
+        for g in range(n_groups):
+            cols = []
+            for t_rank, t_t, lo_l, hi_l in cls_cols:
+                a, b = lo_l[g], hi_l[g]
+                cols.append(t_rank[a:b])
+                cols.append(t_t[a:b])
+            nb = grp_seg_lo[g + 1] - grp_seg_lo[g] == 1   # no rotation: the
+            tl = tails[g]                                 # carry stays open
+            obs = tl.observed if (nb and tl is not None) else 0
+            new_tails[g] = _Tail(*cols, observed=obs)
+        forder = np.argsort(ord_c[gstart], kind="stable")
+        for g in forder.tolist():
+            calls[gcids_l[g]] = new_tails[g]
+        return True
 
     def on_phase(self, record: PhaseRecord) -> None:
         """Book one fully-formed phase (the EventBus ``publish_phase``
@@ -575,9 +1426,11 @@ class Governor:
     # accounting ---------------------------------------------------------------
     def recent_records(self) -> List[CallRecord]:
         """The last ``retention`` retired occurrences (debugging only —
-        accounting never re-reads them)."""
+        accounting never re-reads them).  Batched retirements sit in the
+        ring as ``(RetiredBlock, i)`` views and materialize here."""
         with self._lock:
-            return list(self._ring)
+            return [r if r.__class__ is CallRecord else r[0].record(r[1])
+                    for r in self._ring]
 
     @property
     def n_inflight(self) -> int:
@@ -615,7 +1468,14 @@ class Governor:
         still in flight — O(in-flight), however long the run was."""
         with self._lock:
             acc = self._acc.clone()
-            for rec in self._calls.values():
+            calls = self._calls
+            for cid, rec in calls.items():
+                if rec.__class__ is not CallRecord:
+                    # columnar tail from the batched path: materialize in
+                    # place (same key, so the dict position — and with it
+                    # the accumulation order — is preserved)
+                    rec = rec.to_record(cid)
+                    calls[cid] = rec
                 self._observe(rec)
                 self._accumulate(rec, acc)
         return GovernorReport(
@@ -652,3 +1512,4 @@ class Governor:
             self.detector.reset()
             if self.tuner is not None:
                 self.tuner.reset()
+

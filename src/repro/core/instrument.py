@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.events import PHASE_NAMES, EventBus
+from repro.core.events import PHASE_NAMES, BatchAccumulator, EventBus
 
 AxisNames = Union[str, Sequence[str]]
 
@@ -55,6 +55,10 @@ _EVENTS_ENABLED = False
 _BUS = EventBus()
 _LOCK = threading.Lock()
 _CALL_COUNTER = [0]
+_INGEST_MODE = "event"
+_ACC: Optional[BatchAccumulator] = None
+DEFAULT_BATCH_SIZE = 65536      # 65536 events x 21 B/event ~= 1.4 MB buffer;
+# the size where the governor's vectorized fold peaks (DESIGN.md §10)
 
 
 def set_mode(mode: str) -> None:
@@ -85,6 +89,46 @@ def get_event_bus() -> EventBus:
     subscriber protocol — see :mod:`repro.core.events`).
     """
     return _BUS
+
+
+def set_ingest_mode(mode: str, batch_size: int = DEFAULT_BATCH_SIZE) -> None:
+    """Choose how host phase events reach the bus: ``"event"`` publishes
+    each event as it happens (the legacy low-latency path), ``"batched"``
+    buffers events in a fixed-dtype :class:`~repro.core.events.
+    BatchAccumulator` and publishes full columnar chunks — the vectorized
+    telemetry spine for week-long, thousand-rank traces (launch drivers:
+    ``--ingest batched``).
+
+    Switching modes flushes any buffered partial batch first, so no event
+    is lost or reordered across the switch.
+    """
+    global _INGEST_MODE, _ACC
+    if mode not in ("event", "batched"):
+        raise ValueError(mode)
+    flush_events()
+    with _LOCK:
+        _INGEST_MODE = mode
+        _ACC = BatchAccumulator(batch_size) if mode == "batched" else None
+
+
+def get_ingest_mode() -> str:
+    return _INGEST_MODE
+
+
+def flush_events() -> int:
+    """Deliver everything the batched ingest mode is holding: the partial
+    accumulator batch is enqueued behind any already-queued full chunks,
+    then the bus queue is drained in FIFO order (so flushing never
+    reorders events around chunks still in flight).  Drivers call this at
+    loop boundaries and end-of-run so the governor sees every event
+    before ``finalize``.  Returns events delivered; in ``"event"`` mode
+    it still drains the queue (normally a no-op)."""
+    with _LOCK:
+        acc = _ACC
+        batch = acc.flush() if acc is not None else None
+    if batch is not None:
+        _BUS.enqueue(batch)
+    return _BUS.drain()
 
 
 def set_event_sink(sink: Optional[Callable[[int, str, int, float], None]]) -> None:
@@ -125,20 +169,33 @@ def reset_instrumentation() -> None:
     one test keeps timestamping the next test's collectives); the tier-1
     ``conftest.py`` calls this around every test.
     """
-    global _MODE, _EVENTS_ENABLED
+    global _MODE, _EVENTS_ENABLED, _INGEST_MODE, _ACC
     _MODE = "off"
     _EVENTS_ENABLED = False
     _BUS.clear()
     with _LOCK:
         _CALL_COUNTER[0] = 0
+        _INGEST_MODE = "event"
+        _ACC = None
 
 
 def _emit(rank, phase_code, call_id) -> None:
-    """Host-side callback: timestamp and publish onto the event bus."""
+    """Host-side callback: timestamp and publish onto the event bus —
+    directly per event, or via the ingest accumulator when the batched
+    spine is on (full buffers are queued, not delivered inline: an
+    ordered ``io_callback`` must not run consumer code)."""
     if not _BUS:
         return
-    _BUS.publish(int(rank), PHASE_NAMES[int(phase_code)], int(call_id),
-                 time.monotonic())
+    t = time.monotonic()
+    acc = _ACC
+    if acc is None:
+        _BUS.publish(int(rank), PHASE_NAMES[int(phase_code)], int(call_id), t)
+        return
+    with _LOCK:
+        batch = acc.flush() if acc.append(
+            int(rank), int(phase_code), int(call_id), t) else None
+    if batch is not None:
+        _BUS.enqueue(batch)
 
 
 def _host_event(rank: jnp.ndarray, phase_code: int, call_id: int) -> None:

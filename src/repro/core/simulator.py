@@ -164,6 +164,7 @@ def simulate(
     power_cap: Optional[float] = None,
     overlap_aware: bool = True,
     bus: Optional[EventBus] = None,
+    ingest: str = "event",
 ) -> Tuple[SimResult, Optional[TraceRecord]]:
     """Run ``wl`` under ``pol``.
 
@@ -202,7 +203,17 @@ def simulate(
     a live :class:`~repro.core.governor.Governor`, a trace recorder, or
     any other subscriber consumes simulated runs through exactly the
     pipeline the instrumented collectives feed.  Zero cost when ``None``.
+
+    ``ingest`` selects the production path when ``bus`` is set: ``"event"``
+    publishes one call per event (the legacy path); ``"batched"`` buffers
+    each task's per-rank phase columns in a :class:`~repro.core.events.
+    BatchAccumulator` and publishes full columnar chunks through
+    ``publish_batch`` — the same events in the same stream order, so any
+    subscriber sees an identical stream either way (the batched-ingest
+    equivalence suite holds the governor to bit-for-bit on this).
     """
+    if ingest not in ("event", "batched"):
+        raise ValueError(ingest)
     n, t_tasks = wl.n_ranks, wl.n_tasks
     fmax, fmin, lat = hw.f_max, hw.f_min, hw.switch_latency
     grid = hw.pstates()
@@ -237,6 +248,21 @@ def simulate(
 
     # (start, duration, energy) per-rank segments for the power series
     segs: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+
+    acc = None
+    ranks_col = None
+    if bus is not None and ingest == "batched":
+        from repro.core.events import BatchAccumulator
+
+        acc = BatchAccumulator(max(65536, n))
+        ranks_col = np.arange(n, dtype=np.int32)
+
+        def push_phase(code: int, times: np.ndarray) -> None:
+            if acc.free < n:
+                bus.publish_batch(acc.flush())
+            acc.extend(ranks_col, np.full(n, code, dtype=np.int8),
+                       np.full(n, site, dtype=np.int64),
+                       np.asarray(times, dtype=np.float64))
 
     for k in range(t_tasks):
         site = int(wl.site[k])
@@ -456,7 +482,16 @@ def simulate(
             # the naive 3-phase contrast prices the whole window as slack,
             # so its stream starts the barrier at the window start too
             # (subscriber reports track the SimResult they ride along with)
-            if ov_k > 0.0 and overlap_aware:
+            if acc is not None:
+                if ov_k > 0.0 and overlap_aware:
+                    push_phase(3, arrival)
+                    push_phase(4, arrival + ov_k)
+                else:
+                    push_phase(0, window_start)
+                push_phase(1, t_bar)
+                if wc > 0.0:
+                    push_phase(2, t_bar + d_copy)
+            elif ov_k > 0.0 and overlap_aware:
                 for r in range(n):
                     bus.publish(r, "dispatch_enter", site, float(arrival[r]))
                 for r in range(n):
@@ -464,12 +499,13 @@ def simulate(
             else:
                 for r in range(n):
                     bus.publish(r, "barrier_enter", site, float(window_start[r]))
-            for r in range(n):
-                bus.publish(r, "barrier_exit", site, float(t_bar[r]))
-            if wc > 0.0:
-                copy_ends = t_bar + d_copy
+            if acc is None:
                 for r in range(n):
-                    bus.publish(r, "copy_exit", site, float(copy_ends[r]))
+                    bus.publish(r, "barrier_exit", site, float(t_bar[r]))
+                if wc > 0.0:
+                    copy_ends = t_bar + d_copy
+                    for r in range(n):
+                        bus.publish(r, "copy_exit", site, float(copy_ends[r]))
 
         # ---- table updates (what the runtime could actually measure) ----
         if pol.comm_mode == "predict_timeout":
@@ -482,6 +518,9 @@ def simulate(
             trace_comp[k] = d_comp
             trace_slack[k] = slack
             trace_copy[k] = t - t_bar
+
+    if acc is not None and len(acc):
+        bus.publish_batch(acc.flush())      # tail chunk: no event left behind
 
     power_series = None
     if power_dt:

@@ -58,6 +58,84 @@ class StragglerDetector:
             count[rank] = count.get(rank, 0) + 1
         self.n_barriers += 1
 
+    def observe_barriers_cols(self, ranks: np.ndarray, ts: np.ndarray,
+                              offsets: np.ndarray) -> None:
+        """Record many barriers at once from columnar arrival rows (the
+        governor's batched ingest path).
+
+        ``ranks``/``ts`` hold the arrival rows of ``len(offsets) - 1``
+        barriers back to back — barrier ``i`` is ``offsets[i]:offsets[i+1]``,
+        rows in the per-barrier insertion order the per-event dict walk
+        would have used.  Detector state afterwards is bit-for-bit what the
+        equivalent :meth:`observe_barrier` sequence leaves: per-barrier
+        means and per-rank lateness sums are folded as strictly sequential
+        left-to-right chains (same-length chains fold column by column —
+        elementwise float64 adds are the scalar adds), never pairwise
+        reductions.  Every barrier must have >= 2 arrivals; the caller
+        filters (:meth:`observe_barrier` drops them silently, so passing
+        one here would desynchronize ``n_barriers``).
+        """
+        nb = int(offsets.shape[0]) - 1
+        if nb <= 0:
+            return
+        sizes = np.diff(offsets)
+        if int(sizes.min()) < 2:
+            raise ValueError("observe_barriers_cols: every barrier needs "
+                             ">= 2 arrivals (caller must filter)")
+        starts = offsets[:-1]
+        means = np.empty(nb)
+        for k in np.unique(sizes).tolist():
+            gm = sizes == k
+            idx = starts[gm][:, None] + np.arange(k)
+            # ufunc.accumulate is a strictly sequential left fold, so one
+            # accumulate per row == the 0.0-seeded scalar add chain
+            rows = np.empty((int(np.count_nonzero(gm)), k + 1))
+            rows[:, 0] = 0.0
+            rows[:, 1:] = ts[idx]
+            means[gm] = np.add.accumulate(rows, axis=1)[:, -1] / k
+        dev = ts - np.repeat(means, sizes)
+        # per-rank lateness chains, in global row order (the stable sort
+        # keeps each rank's rows in barrier-processing order); rank ids
+        # are small, so narrowing the sort key cuts radix passes
+        rmax = int(ranks.max())
+        if 0 <= int(ranks.min()) and rmax < 256:
+            o = ranks.astype(np.uint8).argsort(kind="stable")
+        elif rmax < 2 ** 15 and int(ranks.min()) >= 0:
+            o = ranks.astype(np.int16).argsort(kind="stable")
+        else:
+            o = np.argsort(ranks, kind="stable")
+        r_s = ranks[o]
+        d_s = dev[o]
+        n_rows = r_s.shape[0]
+        run_start = np.empty(n_rows, dtype=bool)
+        run_start[0] = True
+        np.not_equal(r_s[1:], r_s[:-1], out=run_start[1:])
+        run_lo = np.nonzero(run_start)[0]
+        run_hi = np.append(run_lo[1:], n_rows)
+        ur_l = r_s[run_lo].tolist()
+        late_sum, count = self._late_sum, self._count
+        seeds = np.empty(len(ur_l))
+        # dict insertion order is observable (summary(), straggler
+        # tie-breaks): pin new ranks in global first-appearance order
+        counts_l = (run_hi - run_lo).tolist()
+        for oi in np.argsort(o[run_lo], kind="stable").tolist():
+            r = ur_l[oi]
+            seeds[oi] = late_sum.get(r, 0.0)
+            count[r] = count.get(r, 0) + counts_l[oi]
+            late_sum.setdefault(r, 0.0)
+        counts_r = run_hi - run_lo
+        vals = np.empty(len(ur_l))
+        for k in np.unique(counts_r).tolist():
+            gm = counts_r == k
+            idx = run_lo[gm][:, None] + np.arange(k)
+            rows = np.empty((int(np.count_nonzero(gm)), k + 1))
+            rows[:, 0] = seeds[gm]
+            rows[:, 1:] = d_s[idx]
+            vals[gm] = np.add.accumulate(rows, axis=1)[:, -1]
+        for r, v in zip(ur_l, vals.tolist()):
+            late_sum[r] = v
+        self.n_barriers += nb
+
     def summary(self) -> Dict[int, float]:
         """rank -> mean lateness (s; positive = habitually late)."""
         return {

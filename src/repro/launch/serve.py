@@ -132,8 +132,16 @@ def _run_continuous(args, cfg, params, mesh, n_dev: int, mp: int) -> None:
     # the governor is just the first subscriber (add probes beside it)
     bus = EventBus()
     bus.subscribe(gov)
+    if args.ingest == "batched":
+        from repro.core import instrument
+
+        instrument.set_ingest_mode("batched")
     if registry is not None:
         collector = GovernorCollector(registry, gov)
+        if args.ingest == "batched":
+            from repro.obs.metrics import IngestMetrics
+
+            IngestMetrics(registry, bus)
         if args.metrics_out:
             writer = MetricsJsonlWriter(args.metrics_out, registry, collector)
         if args.dashboard:
@@ -152,6 +160,11 @@ def _run_continuous(args, cfg, params, mesh, n_dev: int, mp: int) -> None:
     t0 = time.time()
     done = eng.serve(reqs, governor=bus, slo=slo)
     dt = time.time() - t0
+    if args.ingest == "batched":
+        from repro.core import instrument
+
+        instrument.flush_events()
+        instrument.set_ingest_mode("event")
     n_tok = sum(len(r.out) for r in done)
     rep = gov.finalize()
     meter = eng._last_meter
@@ -238,6 +251,13 @@ def main() -> None:
     ap.add_argument("--dashboard", action="store_true",
                     help="render the telemetry dashboard after the run "
                          "(continuous mode)")
+    ap.add_argument("--ingest", choices=["event", "batched"], default="event",
+                    help="instrument-layer event ingestion: 'batched' "
+                         "accumulates raw 5-phase events into fixed-dtype "
+                         "EventBatch chunks and exports ingest-health metrics "
+                         "(events/s, occupancy, queue depth); the continuous "
+                         "engine's own phase stream is occurrence-granular "
+                         "and unaffected")
     obslog.add_flags(ap)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

@@ -142,6 +142,13 @@ def main() -> None:
     ap.add_argument("--dashboard", action="store_true",
                     help="render a console telemetry dashboard at the report "
                          "cadence (implies --instrument profile)")
+    ap.add_argument("--ingest", choices=["event", "batched"], default="event",
+                    help="event-bus ingestion: 'event' publishes each phase "
+                         "event as it fires; 'batched' accumulates fixed-dtype "
+                         "EventBatch columns (21 B/event) and delivers them "
+                         "chunk-at-a-time to batch-capable subscribers — same "
+                         "stream order, bit-identical governor report, ~8x the "
+                         "sink throughput")
     obslog.add_flags(ap)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -196,6 +203,10 @@ def main() -> None:
     governor = Governor(policy=policy_for_theta(args.theta), recorder=recorder)
     if registry is not None:
         collector = GovernorCollector(registry, governor)
+        if args.ingest == "batched":
+            from repro.obs.metrics import IngestMetrics
+
+            IngestMetrics(registry, instrument.get_event_bus())
         if args.metrics_out:
             writer = MetricsJsonlWriter(args.metrics_out, registry, collector)
         if args.dashboard:
@@ -218,6 +229,8 @@ def main() -> None:
             # the governor's recorder slot, not the bus
             bus = instrument.get_event_bus()
             bus.subscribe(governor)
+        if args.ingest == "batched":
+            instrument.set_ingest_mode("batched")
 
     em = ElasticMesh(axis_names=("data", "model"))
     mesh = em.build(model_parallel=args.model_parallel)
@@ -313,6 +326,11 @@ def main() -> None:
             step = latest
             log.info("resumed", devices=len(em.healthy_devices()), step=latest)
     loader.close()
+    if args.ingest == "batched":
+        # drain the partial accumulator + any queued chunks while the
+        # governor is still subscribed, then drop back to per-event mode
+        instrument.flush_events()
+        instrument.set_ingest_mode("event")
     if args.instrument == "profile":
         rep = governor.finalize()
         log.info("governor", calls=rep.n_calls, downshifts=rep.n_downshifts,

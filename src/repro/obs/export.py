@@ -227,6 +227,21 @@ class ConsoleDashboard:
             rows.append(f"  completed {int(done)}")
         return rows
 
+    def _ingest_rows(self) -> List[str]:
+        g = self.registry.get_value
+        total = g("ingest_events_total")
+        if total is None:
+            return []
+        rate = g("ingest_events_per_second") or 0.0
+        occ = g("ingest_batch_occupancy") or 0.0
+        depth = g("ingest_queue_depth") or 0.0
+        fallback = g("ingest_fallback_events_total") or 0.0
+        row = (f"  ingest {rate / 1e6:6.2f}M ev/s   occupancy "
+               f"{100.0 * occ:5.1f}%   queue {int(depth)}")
+        if fallback:
+            row += f"   fallback {int(fallback)}"
+        return [row]
+
     def _power_rows(self) -> List[str]:
         caps = {lab.get("job"): v for lab, v in
                 _labeled(self.registry, "job_cap_watts")}
@@ -244,8 +259,8 @@ class ConsoleDashboard:
         if step is not None:
             head += f" · step {step}"
         head += " =="
-        rows = ([head] + self._governor_rows() + self._serve_rows()
-                + self._power_rows())
+        rows = ([head] + self._governor_rows() + self._ingest_rows()
+                + self._serve_rows() + self._power_rows())
         return "\n".join(rows)
 
     def tick(self, step: Optional[int] = None) -> str:

@@ -294,6 +294,32 @@ class BusMetrics:
         if rec.copy_end:
             c["copy_exit"] = c.get("copy_exit", 0) + len(rec.copy_end)
 
+    def on_retired_batch(self, block) -> None:
+        """Event counts from one :class:`~repro.core.governor.RetiredBlock`
+        — the batched-ingest analogue of :meth:`on_retired`, identical
+        totals (the equivalence suite compares them), one call per *chunk*
+        of retirements instead of one per occurrence.  Pure column math:
+        the block's enter rows carry a NaN-free dispatch join time exactly
+        when the rank arrived via ``dispatch_enter``+``wait_enter``."""
+        c = self._ev_counts
+        n_enter = int(block.row_rid.shape[0])
+        # row_td == row_td is the no-numpy-import NaN test
+        n_wait = int((block.row_td == block.row_td).sum()) if n_enter else 0
+        n_disp = int(block.class_counts("dispatch").sum())
+        n_slack = int(block.class_counts("slack").sum())
+        n_copy = int(block.class_counts("copy").sum())
+        if n_disp:
+            c["dispatch_enter"] = c.get("dispatch_enter", 0) + n_disp
+        if n_wait:
+            c["wait_enter"] = c.get("wait_enter", 0) + n_wait
+        n_enter -= n_wait
+        if n_enter:
+            c["barrier_enter"] = c.get("barrier_enter", 0) + n_enter
+        if n_slack:
+            c["barrier_exit"] = c.get("barrier_exit", 0) + n_slack
+        if n_copy:
+            c["copy_exit"] = c.get("copy_exit", 0) + n_copy
+
     # cold path ------------------------------------------------------------
     def _sync(self) -> None:
         """Move the cheap per-phase tallies into registry counters (counters
@@ -303,6 +329,66 @@ class BusMetrics:
             delta = n - child.value
             if delta:
                 child.inc(delta)
+
+
+class IngestMetrics:
+    """Batched-ingest health: the :class:`~repro.core.events.EventBus`
+    ingest counters rendered as registry instruments, plus an events/sec
+    rate gauge over the sync-to-sync window — the dashboard's "is the
+    telemetry spine keeping up" panel (events/s, mean batch occupancy,
+    drain-queue depth).
+
+    Pull-model like :class:`GovernorCollector`: one ``ingest_stats()``
+    read per registry snapshot, zero cost on the publish path."""
+
+    def __init__(self, registry: MetricsRegistry, bus,
+                 time_fn: Optional[Callable[[], float]] = None):
+        import time as _time
+
+        self.registry = registry
+        self.bus = bus
+        self._now = time_fn or _time.monotonic
+        self._events = registry.counter(
+            "ingest_events_total", "events published through the bus")
+        self._batches = registry.counter(
+            "ingest_batches_total", "columnar chunks published")
+        self._fallback = registry.counter(
+            "ingest_fallback_events_total",
+            "events delivered via the per-event legacy-subscriber loop")
+        self._occupancy = registry.gauge(
+            "ingest_batch_occupancy", "mean fill fraction of published chunks")
+        self._rate = registry.gauge(
+            "ingest_events_per_second", "bus event throughput, last window")
+        self._queue = registry.gauge(
+            "ingest_queue_depth", "chunks waiting for a drain()")
+        self._queued_ev = registry.gauge(
+            "ingest_queued_events", "events inside queued chunks")
+        self._last_t: Optional[float] = None
+        self._last_events = 0
+        registry.add_collector(self.collect)
+
+    def collect(self) -> dict:
+        st = self.bus.ingest_stats()
+        now = self._now()
+        ev = st["events_total"]
+        if self._last_t is not None:
+            dt = now - self._last_t
+            if dt > 0:
+                self._rate.set((ev - self._last_events) / dt)
+        self._last_t = now
+        self._last_events = ev
+        # counters are monotone: book the delta since the last sync
+        for fam, key in ((self._events, "events_total"),
+                         (self._batches, "batches_total"),
+                         (self._fallback, "fallback_events_total")):
+            child = fam.labels()
+            delta = st[key] - child.value
+            if delta:
+                child.inc(delta)
+        self._occupancy.set(st["mean_occupancy"])
+        self._queue.set(st["queue_depth"])
+        self._queued_ev.set(st["queued_events"])
+        return st
 
 
 class GovernorCollector:

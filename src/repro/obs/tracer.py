@@ -98,6 +98,22 @@ class GovernorTap:
         if self._metrics is not None:
             self._metrics.on_retired(rec)
 
+    def on_retired_batch(self, block) -> None:
+        """One :class:`~repro.core.governor.RetiredBlock` from the batched
+        ingest path.  The tap advertising this hook is what lets the
+        governor keep its vectorized fold while recording; a child that
+        only speaks ``on_retired`` gets the block expanded to per-record
+        calls (identical materialization to the retention ring)."""
+        for child in (self._tracer, self._metrics):
+            if child is None:
+                continue
+            cb = getattr(child, "on_retired_batch", None)
+            if cb is not None:
+                cb(block)
+            else:
+                for rec in block.records():
+                    child.on_retired(rec)
+
 
 class RecorderFanout:
     """Fan the governor's single ``recorder=`` slot out to N recorder-likes
@@ -108,23 +124,53 @@ class RecorderFanout:
 
     def __init__(self, children):
         self.children = list(children)
-        self._on_event = [c.on_event for c in self.children
-                          if hasattr(c, "on_event")]
-        self._on_phase = [c.on_phase for c in self.children
-                          if hasattr(c, "on_phase")]
-        self._on_act = [c.on_actuation for c in self.children
-                        if hasattr(c, "on_actuation")]
-        self._on_theta = [c.on_theta for c in self.children
-                          if hasattr(c, "on_theta")]
-        self._on_pair = [c.on_actuation_pair for c in self.children
-                         if hasattr(c, "on_actuation_pair")]
-        self._on_retired = [c.on_retired for c in self.children
-                            if hasattr(c, "on_retired")]
+
+        def hooks(name):
+            # getattr-not-None, not hasattr: a nested fanout (or any
+            # child using the None-shadowing convention below) carries
+            # the attribute but may have disowned the hook
+            return [cb for c in self.children
+                    if (cb := getattr(c, name, None)) is not None]
+
+        self._on_event = hooks("on_event")
+        self._on_phase = hooks("on_phase")
+        self._on_act = hooks("on_actuation")
+        self._on_theta = hooks("on_theta")
+        self._on_pair = hooks("on_actuation_pair")
+        self._on_retired = hooks("on_retired")
+        self._on_retired_batch = hooks("on_retired_batch")
+        # children that speak only the per-record retirement form get
+        # batched blocks expanded (same materialization as the ring)
+        self._on_ret_only = [
+            c.on_retired for c in self.children
+            if getattr(c, "on_retired", None) is not None
+            and getattr(c, "on_retired_batch", None) is None]
         # children that speak only the eager actuation form (TraceRecorder)
         # get expanded pairs when the governor uses the spine hook
-        self._on_act_only = [c.on_actuation for c in self.children
-                             if hasattr(c, "on_actuation")
-                             and not hasattr(c, "on_actuation_pair")]
+        self._on_act_only = [
+            c.on_actuation for c in self.children
+            if getattr(c, "on_actuation", None) is not None
+            and getattr(c, "on_actuation_pair", None) is None]
+        # a hook no child subscribes to is *absent*, not a no-op: shadow
+        # the class method with None so the governor's recorder
+        # pre-resolution sees a missing hook — in particular, a fanout of
+        # batch-capable children must not advertise ``on_event`` (which
+        # would force the per-event replay and defeat the vectorized
+        # batch path the children opted into)
+        if not self._on_event:
+            self.on_event = None
+        if not self._on_phase:
+            self.on_phase = None
+        if not self._on_act:
+            self.on_actuation = None
+        if not self._on_theta:
+            self.on_theta = None
+        if not self._on_pair and not self._on_act_only:
+            self.on_actuation_pair = None
+        if not self._on_retired:
+            self.on_retired = None
+        if not self._on_retired_batch and not self._on_ret_only:
+            self.on_retired_batch = None
 
     def on_event(self, rank, phase, call_id, t):
         for cb in self._on_event:
@@ -157,6 +203,14 @@ class RecorderFanout:
     def on_retired(self, rec):
         for cb in self._on_retired:
             cb(rec)
+
+    def on_retired_batch(self, block):
+        for cb in self._on_retired_batch:
+            cb(block)
+        if self._on_ret_only:
+            for rec in block.records():
+                for cb in self._on_ret_only:
+                    cb(rec)
 
 
 class SpanTracer:
@@ -201,6 +255,16 @@ class SpanTracer:
         spans are reconstructed from it at export."""
         self.n_seen += 1
         self._append(("ret", rec))
+
+    def on_retired_batch(self, block) -> None:
+        """One :class:`~repro.core.governor.RetiredBlock` — the batched
+        ingest form of :meth:`on_retired`: a single reference append
+        carrying ``block.n`` retirements (it counts as one capture record
+        for ring/drop accounting, like any other append); spans come out
+        of the block's row arrays at export, identical to what the same
+        stream's per-record captures would produce."""
+        self.n_seen += 1
+        self._append(("retb", block))
 
     # ---- capture (cold hooks) --------------------------------------------
     def ingest_governor(self, governor) -> None:
@@ -258,6 +322,22 @@ class SpanTracer:
                 if not times:
                     continue
                 t = min(times)
+            elif kind == "retb":
+                b = rec[1]
+                t = float(b.row_t0.min()) if b.row_t0.size else None
+                # dispatch-only ranks have no row; pull their times from
+                # the dispatch class restricted to this block's segments
+                sid_arr, _dr, dt_arr, _dp = b.classes["dispatch"]
+                if sid_arr.size:
+                    lo = sid_arr.searchsorted(b.sid_of_rid, "left")
+                    hi = sid_arr.searchsorted(b.sid_of_rid, "right")
+                    for l, h in zip(lo.tolist(), hi.tolist()):
+                        if h > l:
+                            td = float(dt_arr[l:h].min())
+                            if t is None or td < t:
+                                t = td
+                if t is None:
+                    continue
             else:                       # act / theta carry .t
                 t = rec[1].t
             if t0 is None or t < t0:
@@ -337,6 +417,32 @@ class SpanTracer:
                     span(rank, "slack", t0r, t1, args)
                     t2 = r.copy_end.get(rank)
                     if t2 is not None and t2 > t1:
+                        span(rank, "copy", t1, t2, args)
+            elif kind == "retb":
+                # a RetiredBlock's row arrays are exactly the retired
+                # records' entered ranks in per-record insertion order, so
+                # walking them yields the same spans the "ret" branch
+                # would over block.records() (NaN marks a missing phase)
+                b = rec[1]
+                cids_l = b.cids.tolist()
+                rid_l = b.row_rid.tolist()
+                rank_l = b.row_rank.tolist()
+                t0_l = b.row_t0.tolist()
+                t1_l = b.row_t1.tolist()
+                t2_l = b.row_t2.tolist()
+                td_l = b.row_td.tolist()
+                for i in range(len(rid_l)):
+                    args = {"call": cids_l[rid_l[i]]}
+                    rank, t0r = rank_l[i], t0_l[i]
+                    td = td_l[i]
+                    if td == td and t0r > td:
+                        span(rank, "overlap", td, t0r, args)
+                    t1 = t1_l[i]
+                    if t1 != t1:
+                        continue
+                    span(rank, "slack", t0r, t1, args)
+                    t2 = t2_l[i]
+                    if t2 == t2 and t2 > t1:
                         span(rank, "copy", t1, t2, args)
             elif kind == "act":
                 act = rec[1]
