@@ -123,3 +123,81 @@ def run(full: bool = False) -> dict:
     }
     save_json("bench_serve", payload)
     return payload
+
+
+def run_fleet(full: bool = False) -> dict:
+    """Fleet headline: static-N vs SLO-autoscaled replicas under one watt
+    cap on the diurnal trace (virtual clock, deterministic), plus the
+    prefix-cache hit rate on the session-reuse trace.
+
+    The claim the numbers must carry: the autoscaled fleet spends fewer
+    joules per token at *no worse* SLO attainment, because off-peak it
+    sheds replicas the static fleet keeps idling at the arbiter floor.
+    """
+    from repro.configs import get_config, reduced
+    from repro.serve.fleet.fleet import FleetConfig, FleetSim
+    from repro.serve.fleet.scenarios import diurnal_trace, session_reuse_trace
+
+    cfg = reduced(get_config("llama3.2-1b"))
+    duration = 90.0 if full else 60.0
+    trace = diurnal_trace(duration_s=duration, base_rate=2.0, peak_ratio=8,
+                          seed=0)
+
+    def fleet_cfg(autoscale: bool) -> FleetConfig:
+        return FleetConfig(cfg=cfg, n_replicas=3, autoscale=autoscale,
+                           min_replicas=1, cap_w=40.0, floor_w=4.0,
+                           step_s=0.01, ttft_target=1.5)
+
+    results = {}
+    for mode, autoscale in (("static", False), ("autoscaled", True)):
+        t0 = time.monotonic()
+        res = FleetSim(fleet_cfg(autoscale)).run(trace)
+        wall = time.monotonic() - t0
+        results[mode] = res
+        emit(f"serve.fleet_{mode}",
+             wall * 1e6 / max(res.tokens_out, 1),
+             f"j_per_tok={res.joules_per_token:.4f}"
+             f";ttft_att={res.ttft_attainment:.3f}"
+             f";peak_replicas={res.n_replicas_peak}"
+             f";ups={res.n_scale_ups};downs={res.n_scale_downs}")
+
+    s, a = results["static"], results["autoscaled"]
+    win = (a.joules_per_token < s.joules_per_token
+           and a.ttft_attainment >= s.ttft_attainment)
+    emit("serve.fleet_headline",
+         (s.joules_per_token - a.joules_per_token) * 1e6,
+         f"saving_pct={100 * (1 - a.joules_per_token / s.joules_per_token):.1f}"
+         f";win={win};cap_ok={a.max_alloc_sum_w <= a.cap_w + 1e-9}")
+
+    reuse = FleetSim(fleet_cfg(False)).run(session_reuse_trace(seed=1))
+    emit("serve.fleet_prefix", reuse.prefix_hit_rate * 1e6,
+         f"hit_rate={reuse.prefix_hit_rate:.3f}"
+         f";lookups={reuse.prefix_lookups};hits={reuse.prefix_hits}")
+
+    payload = {
+        "trace": {"name": trace.name, "duration_s": duration,
+                  "n_requests": trace.n_requests, "seed": trace.seed},
+        "static": s.to_dict(),
+        "autoscaled": a.to_dict(),
+        "session_reuse": reuse.to_dict(),
+        "headline": {
+            "joules_per_token_static": s.joules_per_token,
+            "joules_per_token_autoscaled": a.joules_per_token,
+            "saving_pct": 100 * (1 - a.joules_per_token / s.joules_per_token),
+            "autoscaled_wins": win,
+            "cap_never_exceeded": a.max_alloc_sum_w <= a.cap_w + 1e-9,
+            "prefix_hit_rate": reuse.prefix_hit_rate,
+        },
+    }
+    save_json("bench_serve_fleet", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import sys
+
+    print("name,us_per_call,derived")
+    if "fleet" in sys.argv[1:]:
+        run_fleet(full="--full" in sys.argv)
+    else:
+        run(full="--full" in sys.argv)

@@ -11,6 +11,8 @@ full JSON artifacts under artifacts/.
   runtime — framework micro-benchmarks (simulator/governor/barrier cost)
   dist    — distribution substrate (int8 compressed_psum, straggler detector)
   serve   — static vs continuous batching tok/s + priced decode slack
+  fleet   — static-N vs autoscaled replica fleet: joules/token, SLO
+            attainment, prefix-cache hit rate under the cluster watt cap
   cluster — slack-driven cap arbiter vs static equal-split + trace replay
 
 ``python -m benchmarks.run [--only table3,roofline] [--full]``
@@ -46,6 +48,7 @@ def main() -> None:
         "runtime": bench_runtime.run,
         "dist": bench_dist.run,
         "serve": bench_serve.run,
+        "fleet": bench_serve.run_fleet,
         "cluster": bench_cluster.run,
         "table1": table1_predictability.run,
         "fig3": fig3_feature_importance.run,

@@ -52,6 +52,16 @@ class JobSample:
     exploited_ratio: float
     done: bool = False
     overlap_ratio: float = 0.0
+    # serving health (zero for non-serving tenants): the arbiter allocates
+    # on slack alone, but the dashboard and the fleet autoscaler read SLO
+    # attainment and prefix reuse off the same sample stream
+    ttft_p50: float = 0.0
+    ttft_p99: float = 0.0
+    tpot_p50: float = 0.0
+    tpot_p99: float = 0.0
+    prefix_hits: int = 0
+    prefix_lookups: int = 0
+    prefix_hit_rate: float = 0.0
 
 
 @dataclass

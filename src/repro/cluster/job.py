@@ -238,15 +238,37 @@ class ServeJob(GovernorJob):
     :class:`DecodeSlackMeter` already books underfill/idle into the
     governor, so the snapshot path is identical; the engine is kept (duck-
     typed, no serve import) to surface decode fill in the report stream.
+
+    Given an :class:`~repro.serve.slo.SLOTracker`, ``last_sample``
+    additionally carries TTFT/TPOT percentiles and — when the engine has a
+    prefix cache attached — prefix-hit counters, so the arbiter's sample
+    stream shows serving *health*, not just watts and slack.
     """
 
     def __init__(self, job_id: str, engine, governor: Governor,
                  cap_w: float, n_ranks: int = 1,
-                 hw: HwModel = DEFAULT_HW, floor_w: float = 0.0):
+                 hw: HwModel = DEFAULT_HW, floor_w: float = 0.0,
+                 slo=None):
         super().__init__(job_id, governor, n_ranks, cap_w, hw, floor_w)
         self.engine = engine
+        self.slo = slo
 
     @property
     def fill_fraction(self) -> float:
         meter = getattr(self.engine, "_last_meter", None)
         return meter.fill_fraction if meter is not None else 1.0
+
+    def last_sample(self) -> JobSample:
+        sample = super().last_sample()
+        if self.slo is not None:
+            s = self.slo.summary()
+            sample.ttft_p50 = s["ttft"]["p50"]
+            sample.ttft_p99 = s["ttft"]["p99"]
+            sample.tpot_p50 = s["tpot"]["p50"]
+            sample.tpot_p99 = s["tpot"]["p99"]
+        cache = getattr(self.engine, "prefix_cache", None)
+        if cache is not None:
+            sample.prefix_hits = cache.n_hits
+            sample.prefix_lookups = cache.n_lookups
+            sample.prefix_hit_rate = cache.hit_rate
+        return sample

@@ -1,4 +1,4 @@
-"""Serving driver: static batch or continuous batching with priced slack.
+"""Serving driver: static batch, continuous batching, or a replica fleet.
 
   # legacy static batch (TP partition rules on a multi-chip host)
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
@@ -7,6 +7,13 @@
   # continuous batching: paged KV pool, Poisson arrivals, governor report
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
       --continuous --n-requests 8 --arrival-rate 40 --slots 4 --page-size 8
+
+  # replica fleet: N real engines behind the prefix-aware router, watt
+  # arbitration per epoch (wall clock); add --autoscale for the
+  # deterministic virtual-clock fleet with SLO-driven membership
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
+      --fleet 2 --fleet-trace flash-crowd --fleet-duration 3 \
+      [--autoscale] [--metrics-out fleet.jsonl]
 
 Timing excludes compilation: one warmup generate runs before the clock
 starts and the compile time is printed separately.  On a multi-chip host
@@ -210,6 +217,135 @@ def _run_continuous(args, cfg, params, mesh, n_dev: int, mp: int) -> None:
                  dropped=trace_rec.n_dropped, path=path)
 
 
+def _fleet_trace(args):
+    from repro.serve.fleet import (
+        diurnal_trace,
+        flash_crowd_trace,
+        session_reuse_trace,
+    )
+
+    if args.fleet_trace == "diurnal":
+        return diurnal_trace(duration_s=args.fleet_duration, seed=args.seed)
+    if args.fleet_trace == "session-reuse":
+        return session_reuse_trace(seed=args.seed)
+    return flash_crowd_trace(duration_s=args.fleet_duration, seed=args.seed)
+
+
+def _fleet_metrics_out(args, fill_registry) -> None:
+    """Export fleet metrics (and validate-able snapshots) if asked."""
+    if not (args.metrics_out or args.dashboard):
+        return
+    from repro.obs.export import ConsoleDashboard, MetricsJsonlWriter
+    from repro.obs.metrics import MetricsRegistry
+
+    registry = MetricsRegistry()
+    fill_registry(registry)
+    if args.metrics_out:
+        with MetricsJsonlWriter(args.metrics_out, registry) as writer:
+            writer.write()
+            log.info("metrics_out", path=args.metrics_out,
+                     lines=writer.n_lines)
+    if args.dashboard:
+        ConsoleDashboard(registry, title=f"fleet {args.arch}").tick()
+
+
+def _run_fleet_sim(args, cfg) -> None:
+    """Deterministic virtual-clock fleet: membership changes allowed, so
+    this is the ``--autoscale`` path (spawning a real engine mid-run would
+    recompile; the sim replica warms up in ``warmup_s`` of virtual time)."""
+    from repro.serve.fleet import FleetConfig, FleetSim
+
+    cap_w = args.power_cap if args.power_cap > 0 else 40.0
+    fc = FleetConfig(cfg=cfg, n_replicas=args.fleet,
+                     autoscale=args.autoscale, min_replicas=1,
+                     n_slots=args.slots, cap_w=cap_w, floor_w=4.0,
+                     step_s=0.01, ttft_target=1.5)
+    sim = FleetSim(fc)
+    trace = _fleet_trace(args)
+    res = sim.run(trace)
+    log.info("fleet_done", trace=trace.name, autoscaled=args.autoscale,
+             requests=res.n_completed, tokens=res.tokens_out,
+             joules_per_token=res.joules_per_token,
+             ttft_attainment=res.ttft_attainment,
+             prefix_hit_rate=res.prefix_hit_rate,
+             peak_replicas=res.n_replicas_peak,
+             scale_ups=res.n_scale_ups, scale_downs=res.n_scale_downs,
+             cap_w=res.cap_w, max_alloc_sum_w=res.max_alloc_sum_w)
+    _fleet_metrics_out(args, sim.export_metrics)
+
+
+def _run_fleet_real(args, cfg, params) -> None:
+    """N real engines behind the router on the wall clock: fixed
+    membership, per-epoch watt arbitration from each replica's governor."""
+    from repro.serve import ContinuousEngine
+    from repro.serve.fleet import run_engine_fleet
+
+    trace = _fleet_trace(args)
+    reqs = trace.fresh_requests()
+    longest = max(len(r.prompt) + r.max_new for r in reqs)
+    max_len = longest + args.page_size
+    max_len += (-max_len) % args.page_size
+    cap_w = args.power_cap if args.power_cap > 0 else 40.0
+
+    if args.ingest == "batched":
+        from repro.core import instrument
+
+        instrument.set_ingest_mode("batched")
+    engines, governors, slos = [], [], []
+    t0 = time.time()
+    for _ in range(args.fleet):
+        eng = ContinuousEngine(cfg, params, n_slots=args.slots,
+                               max_len=max_len, page=args.page_size,
+                               temperature=args.temperature)
+        eng.enable_prefix_cache()
+        warm = make_batch(cfg, batch=1, seq_len=len(reqs[0].prompt),
+                          kind="prefill")
+        eng.generate(warm, n_steps=2)
+        engines.append(eng)
+        governors.append(Governor(policy=policy_for_theta(args.theta)))
+        slos.append(SLOTracker())
+    t_compile = time.time() - t0
+
+    t0 = time.time()
+    finished, router, arbiter, _ = run_engine_fleet(
+        engines, reqs, cap_w=cap_w, floor_w=4.0,
+        governors=governors, slos=slos)
+    dt = time.time() - t0
+    if args.ingest == "batched":
+        from repro.core import instrument
+
+        instrument.flush_events()
+        instrument.set_ingest_mode("event")
+    n_tok = sum(len(r.out) for r in finished)
+    hits = sum(e.prefix_cache.n_hits for e in engines)
+    lookups = sum(e.prefix_cache.n_lookups for e in engines)
+    log.info("fleet_done", trace=trace.name, replicas=args.fleet,
+             requests=len(finished), tokens=n_tok, wall_s=dt,
+             tok_per_s=n_tok / dt, compile_s=t_compile,
+             routed=len(router.decisions),
+             prefix_routed=router.n_prefix_routed,
+             prefix_hits=hits, prefix_lookups=lookups, cap_w=cap_w)
+
+    def fill(registry):
+        router.export_metrics(registry)
+        arbiter.export_metrics(registry)
+        for k, (gov, slo) in enumerate(zip(governors, slos)):
+            if k == 0:
+                # one replica's SLO percentiles as the fleet sample; the
+                # registry families are unlabelled per-run singletons
+                slo.export_metrics(registry)
+        registry.gauge("fleet_replicas", "live replicas").set(
+            float(args.fleet))
+        registry.gauge("fleet_prefix_hit_rate",
+                       "prompt tokens served from resident pages").set(
+                           sum(e.prefix_cache.tokens_matched
+                               for e in engines)
+                           / max(sum(e.prefix_cache.tokens_looked_up
+                                     for e in engines), 1))
+
+    _fleet_metrics_out(args, fill)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -222,6 +358,22 @@ def main() -> None:
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching over the paged KV pool")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="run N serving replicas behind the prefix-aware "
+                         "router with per-epoch watt arbitration (real "
+                         "engines on the wall clock; N is the static size, "
+                         "or the autoscale maximum with --autoscale)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="fleet mode: SLO-driven membership on the "
+                         "deterministic virtual-clock fleet simulator "
+                         "(scale-ups/-downs reprice every replica's watts)")
+    ap.add_argument("--fleet-trace",
+                    choices=["flash-crowd", "diurnal", "session-reuse"],
+                    default="flash-crowd",
+                    help="fleet mode arrival scenario")
+    ap.add_argument("--fleet-duration", type=float, default=10.0,
+                    help="fleet trace duration in seconds (wall-clock for "
+                         "--fleet, virtual for --autoscale)")
     ap.add_argument("--n-requests", type=int, default=8)
     ap.add_argument("--arrival-rate", type=float, default=40.0,
                     help="Poisson arrival rate (req/s)")
@@ -279,16 +431,22 @@ def main() -> None:
         psh = SH.serve_param_shardings(mesh, params)
         params = jax.tree.map(lambda a, s: jax.device_put(a, s), params, psh)
 
-    if not args.continuous and (args.theta or args.trace_out or args.power_cap > 0
-                                or args.perfetto_out or args.metrics_out
-                                or args.dashboard):
+    if not args.continuous and not args.fleet and (
+            args.theta or args.trace_out or args.power_cap > 0
+            or args.perfetto_out or args.metrics_out
+            or args.dashboard):
         # static mode builds no governor: these flags would be silent no-ops
         log.warning("flags_ignored",
                     why="--theta/--trace-out/--power-cap/telemetry need the "
                         "continuous engine's governor (add --continuous)")
 
     with set_mesh(mesh):
-        if args.continuous:
+        if args.fleet:
+            if args.autoscale:
+                _run_fleet_sim(args, cfg)
+            else:
+                _run_fleet_real(args, cfg, params)
+        elif args.continuous:
             _run_continuous(args, cfg, params, mesh, n, mp)
         else:
             _run_static(args, cfg, params)

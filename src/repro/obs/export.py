@@ -16,7 +16,8 @@ for a snapshot, keeping the telemetry overhead budget (bench-guarded at
   scrape endpoint (or a file_sd textfile collector) is one call away.
 * :class:`ConsoleDashboard` — a compact fixed-layout block re-rendered at
   the driver's report cadence: slack/overlap/exploited ratios, energy
-  saved, theta per site, serve TTFT/TPOT percentiles, watts vs cap.
+  saved, theta per site, serve TTFT/TPOT percentiles, fleet membership /
+  routing / arbiter grants, watts vs cap.
 """
 from __future__ import annotations
 
@@ -242,6 +243,37 @@ class ConsoleDashboard:
             row += f"   fallback {int(fallback)}"
         return [row]
 
+    def _fleet_rows(self) -> List[str]:
+        g = self.registry.get_value
+        replicas = g("fleet_replicas")
+        if replicas is None:
+            return []
+        rows = [f"  fleet {int(replicas)} replicas"]
+        hit = g("fleet_prefix_hit_rate")
+        routed = g("fleet_router_decisions")
+        pref = g("fleet_router_prefix_routed")
+        if routed is not None:
+            frac = (pref or 0.0) / max(routed, 1.0)
+            rows[0] += (f"   routed {int(routed)}"
+                        f" ({100.0 * frac:.0f}% by prefix)")
+        if hit is not None:
+            rows[0] += f"   prefix hit {100.0 * hit:5.1f}%"
+        ups, downs = g("fleet_scale_ups"), g("fleet_scale_downs")
+        energy = g("fleet_energy_joules")
+        if ups is not None or energy is not None:
+            row = "  "
+            if ups is not None:
+                row += f"scale +{int(ups)}/-{int(downs or 0)}"
+            if energy is not None:
+                row += f"   energy {energy:8.1f}J"
+            rows.append(row)
+        cap = g("arbiter_cap_watts")
+        if cap is not None:
+            pool = g("arbiter_pool_watts") or 0.0
+            rows.append(f"  arbiter cap {cap:.0f}W   granted "
+                        f"{cap - pool:.1f}W   pool {pool:.1f}W")
+        return rows
+
     def _power_rows(self) -> List[str]:
         caps = {lab.get("job"): v for lab, v in
                 _labeled(self.registry, "job_cap_watts")}
@@ -260,7 +292,8 @@ class ConsoleDashboard:
             head += f" · step {step}"
         head += " =="
         rows = ([head] + self._governor_rows() + self._ingest_rows()
-                + self._serve_rows() + self._power_rows())
+                + self._serve_rows() + self._fleet_rows()
+                + self._power_rows())
         return "\n".join(rows)
 
     def tick(self, step: Optional[int] = None) -> str:

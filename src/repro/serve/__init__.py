@@ -4,35 +4,81 @@ The serving-side analogue of the paper's slack mechanism: decode-slot
 underfill and inter-arrival idle gaps are isolated, measured, and priced
 in joules by the same governor that prices MPI slack.
 
-``kvcache``    block-paged KV pool: free-list allocation with admission
-               reservations, per-request page tables, scratch page for
-               idle slots, int8 pages via the ``kv_quant`` path, and the
-               paged single-token decode attention.
-``scheduler``  continuous batching: arrival queue, page-bounded
-               admission, join-on-prefill / evict-on-EOS slot lifecycle,
-               synthetic Poisson arrival traces.
+``kvcache``    block-paged KV pool: refcounted free-list allocation with
+               admission reservations, per-request page tables, scratch
+               page for idle slots, int8 pages via the ``kv_quant`` path,
+               the paged single-token decode attention, and the
+               copy-on-write page clone for prefix sharing.
+``scheduler``  continuous batching: arrival queue, page-bounded (and
+               prefix-aware) admission, join-on-prefill / evict-on-EOS
+               slot lifecycle, synthetic Poisson arrival traces.
 ``slack``      the governor bridge: per-step filled-vs-capacity and idle
                gaps become canonical ``PhaseRecord`` phases published to
                a governor or ``repro.core.events.EventBus``.
 ``slo``        per-request TTFT/TPOT percentile tracking feeding the
                scheduler's concurrency cap.
-``engine``     :class:`ContinuousEngine` (paged, continuous) and the
-               legacy static-batch :class:`ServeEngine` wrapper.
-"""
-from repro.serve.engine import ContinuousEngine, ServeEngine, make_serve_steps  # noqa: F401
-from repro.serve.kvcache import PagedKVPool  # noqa: F401
-from repro.serve.scheduler import Request, Scheduler, poisson_arrivals  # noqa: F401
-from repro.serve.slack import DecodeSlackMeter  # noqa: F401
-from repro.serve.slo import SLOTracker  # noqa: F401
+``engine``     :class:`ContinuousEngine` (paged, continuous), the
+               step-granular :class:`EngineSession` the fleet driver
+               interleaves, and the legacy static-batch
+               :class:`ServeEngine` wrapper.
+``fleet``      multi-replica serving: prefix-cache-aware router, SLO
+               autoscaler, watt arbitration, scenarios, and the
+               deterministic fleet simulator.
 
-__all__ = [
-    "ContinuousEngine",
-    "DecodeSlackMeter",
-    "PagedKVPool",
-    "Request",
-    "Scheduler",
-    "ServeEngine",
-    "SLOTracker",
-    "make_serve_steps",
-    "poisson_arrivals",
-]
+Exports resolve lazily (PEP 562): importing ``repro.serve`` does not pull
+in jax-heavy modules until a symbol is touched, and ``dir()`` lists
+everything importable — symbols and submodules — so drivers can discover
+the surface without try/except probing.
+"""
+import importlib
+
+# symbol -> defining submodule (the lazy-import table; every name here is
+# importable as `from repro.serve import <name>`)
+_EXPORTS = {
+    "ContinuousEngine": "repro.serve.engine",
+    "EngineSession": "repro.serve.engine",
+    "ServeEngine": "repro.serve.engine",
+    "make_serve_steps": "repro.serve.engine",
+    "PagedKVPool": "repro.serve.kvcache",
+    "Request": "repro.serve.scheduler",
+    "Scheduler": "repro.serve.scheduler",
+    "poisson_arrivals": "repro.serve.scheduler",
+    "DecodeSlackMeter": "repro.serve.slack",
+    "SLOTracker": "repro.serve.slo",
+    # fleet layer
+    "Autoscaler": "repro.serve.fleet.autoscaler",
+    "FleetConfig": "repro.serve.fleet.fleet",
+    "FleetResult": "repro.serve.fleet.fleet",
+    "FleetSim": "repro.serve.fleet.fleet",
+    "run_engine_fleet": "repro.serve.fleet.fleet",
+    "PrefixCache": "repro.serve.fleet.prefix",
+    "PrefixMatch": "repro.serve.fleet.prefix",
+    "SimReplica": "repro.serve.fleet.replica",
+    "FleetRouter": "repro.serve.fleet.router",
+    "ReplicaView": "repro.serve.fleet.router",
+    "FleetTrace": "repro.serve.fleet.scenarios",
+    "diurnal_trace": "repro.serve.fleet.scenarios",
+    "flash_crowd_trace": "repro.serve.fleet.scenarios",
+    "session_reuse_trace": "repro.serve.fleet.scenarios",
+}
+
+_SUBMODULES = ("engine", "fleet", "kvcache", "scheduler", "slack", "slo")
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    target = _EXPORTS.get(name)
+    if target is not None:
+        value = getattr(importlib.import_module(target), name)
+        globals()[name] = value               # cache: resolve once
+        return value
+    if name in _SUBMODULES:
+        module = importlib.import_module(f"repro.serve.{name}")
+        globals()[name] = module
+        return module
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS) | set(_SUBMODULES))

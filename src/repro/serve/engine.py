@@ -18,8 +18,9 @@ output token-for-token for greedy decoding (tier-1 asserted).
 """
 from __future__ import annotations
 
+import collections
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -33,6 +34,7 @@ from repro.models.transformer import prefill as _prefill
 from repro.serve.kvcache import (
     SCRATCH_PAGE,
     PagedKVPool,
+    make_clone_pages,
     paged_attention_decode,
     scatter_prefill_attn,
 )
@@ -179,6 +181,9 @@ class ContinuousEngine:
     # optional repro.obs.tracer.SpanTracer (duck-typed: .serve_event):
     # batch join/evict instants land on the trace's serve track
     tracer: Any = None
+    # optional repro.serve.fleet.prefix.PrefixCache over this engine's pool
+    # (attach via enable_prefix_cache(); attn-only archs, n_prefix == 0)
+    prefix_cache: Any = None
 
     def __post_init__(self):
         self.pool = PagedKVPool(
@@ -187,13 +192,39 @@ class ContinuousEngine:
         self._prefill = jax.jit(partial(_prefill, self.cfg))
         self._decode = jax.jit(make_paged_decode_step(self.cfg))
         self._join = jax.jit(make_join_step(self.cfg))
+        self._clone = jax.jit(make_clone_pages(self.cfg))
         m = self.pool.max_pages_per_req
         self._table = np.full((self.n_slots, m), SCRATCH_PAGE, np.int32)
         self._lengths = np.zeros((self.n_slots,), np.int32)
         self._tokens = np.zeros((self.n_slots,), np.int32)
+        # slot -> deque of prompt-suffix tokens still to force-decode after
+        # a prefix-cache join (no sampling/appending until drained)
+        self._forced: Dict[int, collections.deque] = {}
+
+    def enable_prefix_cache(self, max_pages: Optional[int] = None):
+        """Attach a :class:`~repro.serve.fleet.prefix.PrefixCache` to the pool.
+
+        Only attention K/V lives in shareable pages: recurrent state
+        (SSM/RG-LRU) is per-slot and position-dependent, and frontend
+        prefixes occupy positions the trie cannot key — so prefix reuse is
+        restricted to all-attention archs with ``n_prefix == 0``.
+        """
+        if self.cfg.n_prefix:
+            raise ValueError("prefix cache requires n_prefix == 0 "
+                             "(frontend prefixes are not token-addressable)")
+        if any(k != "attn" for k in self.cfg.pattern):
+            raise ValueError("prefix cache requires an all-attention arch "
+                             "(recurrent state is per-slot, not paged)")
+        from repro.serve.fleet.prefix import PrefixCache
+        self.prefix_cache = PrefixCache(self.pool, max_pages=max_pages)
+        return self.prefix_cache
 
     # ---- request lifecycle ----------------------------------------------
     def _join_request(self, req: Request) -> None:
+        m = req.prefix_match
+        if m is not None and m.n_tokens > 0:
+            self._join_via_prefix(req)
+            return
         cfg = self.cfg
         prompt = np.asarray(req.prompt, np.int32)
         total = len(prompt) + cfg.n_prefix
@@ -221,6 +252,33 @@ class ContinuousEngine:
         self._lengths[slot] = total
         self._tokens[slot] = tok
 
+    def _join_via_prefix(self, req: Request) -> None:
+        """Join without prefill: resident pages cover ``m.n_tokens`` prompt
+        positions, the remaining suffix is replayed through the paged decode
+        step as *forced* tokens (exact K/V, no sampling) — first sampled
+        token only lands once the suffix drains."""
+        m = req.prefix_match
+        prompt = np.asarray(req.prompt, np.int32)
+        pages = list(m.full_pages)
+        if m.partial_page is not None:
+            # copy-on-write: this request extends the half-filled page in
+            # place, so it writes into a private clone while other referents
+            # keep reading the shared original
+            (pid,) = self.pool.alloc(req.rid, 1)
+            self.pool.blocks = self._clone(
+                self.pool.blocks, jnp.int32(m.partial_page), jnp.int32(pid)
+            )
+            pages.append(pid)
+        req.pages = pages
+        slot = req.slot
+        self._table[slot] = SCRATCH_PAGE
+        self._table[slot, :len(pages)] = pages
+        self._lengths[slot] = m.n_tokens              # next write position
+        self._tokens[slot] = int(prompt[m.n_tokens])  # next input token
+        rest = prompt[m.n_tokens + 1:]
+        if len(rest):
+            self._forced[slot] = collections.deque(int(t) for t in rest)
+
     def _select_one(self, logits, req: Request) -> int:
         if self.temperature <= 0.0 or req.key is None:
             return int(jnp.argmax(logits))
@@ -241,6 +299,16 @@ class ContinuousEngine:
             req.t_done = now
         if self.tracer is not None:
             self.tracer.serve_event("evict", now, req.rid, req.slot)
+        drained = self._forced.pop(req.slot, None) is None
+        if self.prefix_cache is not None and req.pages and drained:
+            # adopt this request's written pages into the resident trie:
+            # positions 0..lengths-1 hold K/V of prompt + out[:-1] (the last
+            # sampled token was never decoded, so its K/V was never written)
+            n_written = int(self._lengths[req.slot])
+            tokens = np.concatenate([
+                np.asarray(req.prompt, np.int64), np.asarray(req.out, np.int64)
+            ])[:n_written]
+            self.prefix_cache.insert(tokens, req.pages)
         self._table[req.slot] = SCRATCH_PAGE
         self._tokens[req.slot] = 0
         self._lengths[req.slot] = 0
@@ -263,84 +331,21 @@ class ContinuousEngine:
         :class:`~repro.core.events.EventBus` with any subscriber set —
         when given.
         """
-        sched = Scheduler(self.pool, self.n_slots, n_prefix=self.cfg.n_prefix, slo=slo)
+        sess = EngineSession(self, governor=governor, slo=slo)
         for r in requests:
-            if self.cfg.n_prefix and r.prefix_embeds is None:
-                # without the prefix, positions [S, S+n_prefix) would never
-                # be written and the page mask (unlike the dense slot_pos
-                # mask) would attend their zero K/V — refuse up front
-                raise ValueError(
-                    f"arch {self.cfg.name!r} has n_prefix={self.cfg.n_prefix}: "
-                    f"request {r.rid} must carry prefix_embeds"
-                )
-            sched.submit(r)
-        meter = DecodeSlackMeter(governor) if governor is not None else None
-        self._last_meter = meter
-        finished: List[Request] = []
-        t_start = time.monotonic()
+            sess.submit(r)
         steps = 0
-        while not sched.done:
-            now = time.monotonic() - t_start
-            for req in sched.admit(now):
-                self._join_request(req)
-                tnow = time.monotonic() - t_start
-                if self.tracer is not None:
-                    self.tracer.serve_event("join", tnow, req.rid, req.slot)
-                if slo is not None:
-                    slo.on_first_token(req, tnow)
-                else:
-                    req.t_first = req.t_prev = tnow
-                if not req.wants_more():
-                    self._retire(req, sched, slo, tnow)
-                    finished.append(req)
-            if sched.n_active == 0:
-                nxt = sched.next_arrival()
-                if nxt is None:
+        while not sess.done:
+            sess.admit()
+            if sess.n_active == 0:
+                if not sess.sleep_until_next():
                     break
-                t0 = time.monotonic()
-                wait = (t_start + nxt) - t0
-                if wait > 0:
-                    time.sleep(wait)
-                t1 = time.monotonic()
-                if meter is not None and t1 > t0:
-                    meter.idle(t0, t1)
                 continue
-            for req in sched.active.values():
-                self._grow_pages(req)
-            t0 = time.monotonic()
-            logits, blocks = self._decode(
-                self.params,
-                jnp.asarray(self._tokens),
-                jnp.asarray(self._lengths),
-                jnp.asarray(self._table),
-                self.pool.blocks,
-            )
-            logits = jax.block_until_ready(logits)
-            t1 = time.monotonic()
-            self.pool.blocks = blocks
-            if meter is not None:
-                meter.step(t0, t1, sched.n_active, self.n_slots)
-            greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-            tnow = time.monotonic() - t_start
-            for slot, req in list(sched.active.items()):
-                if self.temperature <= 0.0 or req.key is None:
-                    tok = int(greedy[slot])
-                else:
-                    tok = self._select_one(logits[slot], req)
-                req.out.append(tok)
-                self._lengths[slot] += 1
-                self._tokens[slot] = tok
-                if slo is not None:
-                    slo.on_token(req, tnow)
-                else:
-                    req.t_prev = tnow
-                if not req.wants_more():
-                    self._retire(req, sched, slo, tnow)
-                    finished.append(req)
+            sess.decode_step()
             steps += 1
             if steps > max_steps:
                 raise RuntimeError(f"serve() exceeded {max_steps} decode steps")
-        return finished
+        return sess.finished
 
     # ---- ServeEngine-compatible entry point ------------------------------
     def generate(
@@ -373,3 +378,159 @@ class ContinuousEngine:
         return jnp.asarray(
             np.stack([np.asarray(r.out[:n_steps], np.int32) for r in done])
         )
+
+
+# --------------------------------------------------------------------------
+# step-granular session (fleet driver entry point)
+# --------------------------------------------------------------------------
+
+class EngineSession:
+    """One engine's serving loop, exposed a step at a time.
+
+    ``ContinuousEngine.serve`` is this session driven to completion; the
+    fleet driver instead interleaves N sessions — submit routed requests,
+    ``admit()`` + ``decode_step()`` each replica in turn, and only
+    ``sleep_until_next()`` when *every* replica is idle.  All timestamps
+    are relative to ``t_start`` (shareable across a fleet so SLO clocks
+    agree).
+    """
+
+    def __init__(self, engine: "ContinuousEngine", governor=None, slo=None,
+                 t_start: Optional[float] = None):
+        self.engine = engine
+        self.slo = slo
+        self.sched = Scheduler(
+            engine.pool, engine.n_slots, n_prefix=engine.cfg.n_prefix,
+            slo=slo, prefix_cache=engine.prefix_cache,
+        )
+        self.meter = DecodeSlackMeter(governor) if governor is not None else None
+        engine._last_meter = self.meter
+        self.finished: List[Request] = []
+        self.t_start = time.monotonic() if t_start is None else t_start
+        self.steps = 0
+
+    # ---- clock -----------------------------------------------------------
+    def now(self) -> float:
+        return time.monotonic() - self.t_start
+
+    # ---- queue state -----------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self.sched.done
+
+    @property
+    def n_active(self) -> int:
+        return self.sched.n_active
+
+    @property
+    def n_queued(self) -> int:
+        return self.sched.n_queued
+
+    def next_arrival(self) -> Optional[float]:
+        return self.sched.next_arrival()
+
+    def fill_fraction(self) -> float:
+        return self.sched.n_active / max(self.engine.n_slots, 1)
+
+    # ---- lifecycle -------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        eng = self.engine
+        if eng.cfg.n_prefix and req.prefix_embeds is None:
+            # without the prefix, positions [S, S+n_prefix) would never be
+            # written and the page mask (unlike the dense slot_pos mask)
+            # would attend their zero K/V — refuse up front
+            raise ValueError(
+                f"arch {eng.cfg.name!r} has n_prefix={eng.cfg.n_prefix}: "
+                f"request {req.rid} must carry prefix_embeds"
+            )
+        self.sched.submit(req)
+
+    def admit(self, now: Optional[float] = None) -> List[Request]:
+        """Join every arrived request that fits; returns the joins."""
+        eng = self.engine
+        joins = self.sched.admit(self.now() if now is None else now)
+        for req in joins:
+            eng._join_request(req)
+            tnow = self.now()
+            if eng.tracer is not None:
+                eng.tracer.serve_event("join", tnow, req.rid, req.slot)
+            if req.out:
+                # prefill joins produce the first token immediately; prefix
+                # joins stay silent until the forced suffix drains
+                if self.slo is not None:
+                    self.slo.on_first_token(req, tnow)
+                else:
+                    req.t_first = req.t_prev = tnow
+            if not req.wants_more():
+                eng._retire(req, self.sched, self.slo, tnow)
+                self.finished.append(req)
+        return joins
+
+    def sleep_until_next(self) -> bool:
+        """Idle until the next arrival (metered); False when queue is empty."""
+        nxt = self.sched.next_arrival()
+        if nxt is None:
+            return False
+        t0 = time.monotonic()
+        wait = (self.t_start + nxt) - t0
+        if wait > 0:
+            time.sleep(wait)
+        t1 = time.monotonic()
+        self.note_idle(t0, t1)
+        return True
+
+    def note_idle(self, t0: float, t1: float) -> None:
+        if self.meter is not None and t1 > t0:
+            self.meter.idle(t0, t1)
+
+    def decode_step(self) -> None:
+        """One batched decode step over all active slots."""
+        eng = self.engine
+        sched = self.sched
+        for req in sched.active.values():
+            eng._grow_pages(req)
+        t0 = time.monotonic()
+        logits, blocks = eng._decode(
+            eng.params,
+            jnp.asarray(eng._tokens),
+            jnp.asarray(eng._lengths),
+            jnp.asarray(eng._table),
+            eng.pool.blocks,
+        )
+        logits = jax.block_until_ready(logits)
+        t1 = time.monotonic()
+        eng.pool.blocks = blocks
+        if self.meter is not None:
+            self.meter.step(t0, t1, sched.n_active, eng.n_slots)
+        greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        tnow = self.now()
+        for slot, req in list(sched.active.items()):
+            eng._lengths[slot] += 1
+            forced = eng._forced.get(slot)
+            if forced:
+                # prompt-suffix replay after a prefix join: exact K/V was
+                # just written for the fed token, next one goes in verbatim
+                eng._tokens[slot] = forced.popleft()
+                if not forced:
+                    del eng._forced[slot]
+                continue
+            if eng.temperature <= 0.0 or req.key is None:
+                tok = int(greedy[slot])
+            else:
+                tok = eng._select_one(logits[slot], req)
+            first = not req.out
+            req.out.append(tok)
+            eng._tokens[slot] = tok
+            if self.slo is not None:
+                if first:
+                    self.slo.on_first_token(req, tnow)
+                else:
+                    self.slo.on_token(req, tnow)
+            else:
+                if first:
+                    req.t_first = tnow
+                req.t_prev = tnow
+            if not req.wants_more():
+                eng._retire(req, sched, self.slo, tnow)
+                self.finished.append(req)
+        self.steps += 1

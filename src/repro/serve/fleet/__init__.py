@@ -1,0 +1,44 @@
+"""repro.serve.fleet — multi-replica serving under one watt cap.
+
+Prefix-cache-aware routing (:mod:`router`, :mod:`prefix`), SLO-driven
+autoscaling (:mod:`autoscaler`), deterministic virtual-clock fleet
+simulation plus a real-engine driver (:mod:`fleet`, :mod:`replica`), and
+the arrival scenarios that exercise them (:mod:`scenarios`).
+"""
+from repro.serve.fleet.autoscaler import Autoscaler, ScaleDecision
+from repro.serve.fleet.fleet import (
+    FleetConfig,
+    FleetResult,
+    FleetSim,
+    run_engine_fleet,
+    session_view,
+)
+from repro.serve.fleet.prefix import PrefixCache, PrefixMatch
+from repro.serve.fleet.replica import SimReplica
+from repro.serve.fleet.router import FleetRouter, ReplicaView, RouteDecision
+from repro.serve.fleet.scenarios import (
+    FleetTrace,
+    diurnal_trace,
+    flash_crowd_trace,
+    session_reuse_trace,
+)
+
+__all__ = [
+    "Autoscaler",
+    "ScaleDecision",
+    "FleetConfig",
+    "FleetResult",
+    "FleetSim",
+    "run_engine_fleet",
+    "session_view",
+    "PrefixCache",
+    "PrefixMatch",
+    "SimReplica",
+    "FleetRouter",
+    "ReplicaView",
+    "RouteDecision",
+    "FleetTrace",
+    "diurnal_trace",
+    "flash_crowd_trace",
+    "session_reuse_trace",
+]

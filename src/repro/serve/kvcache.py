@@ -163,6 +163,52 @@ def paged_attention_decode(cfg, p, x, pos, table, block):
     return out, new_block
 
 
+def make_clone_pages(cfg) -> "Any":
+    """clone(blocks, src (int32), dst (int32)) -> blocks with page dst a copy
+    of page src in every attention leaf.
+
+    The copy-on-write primitive for prefix sharing: a joiner extending a
+    *partially filled* cached page writes into fresh storage while every
+    other referent keeps reading the original.  Recurrent-state blocks are
+    per-slot, not paged, so only attention leaves participate (the prefix
+    cache is gated to attention-only archs anyway).
+    """
+
+    page_leaves = ("k_pages", "v_pages", "k_scale_pages", "v_scale_pages")
+
+    def clone_block(block, src, dst, *, stacked: bool):
+        new = dict(block)
+        for name in page_leaves:
+            if name not in block:
+                continue
+            leaf = block[name]
+            if stacked:
+                new[name] = leaf.at[:, dst].set(leaf[:, src])
+            else:
+                new[name] = leaf.at[dst].set(leaf[src])
+        return new
+
+    def clone(blocks, src, dst):
+        new_stack = {}
+        for j, kind in enumerate(cfg.pattern):
+            b = blocks["stack"][str(j)]
+            new_stack[str(j)] = (
+                clone_block(b, src, dst, stacked=True) if kind == "attn" else b
+            )
+        out: Params = {"stack": new_stack}
+        if "rem" in blocks:
+            _, rem_kinds = stack_layout(cfg)
+            out["rem"] = {}
+            for j, kind in enumerate(rem_kinds):
+                b = blocks["rem"][str(j)]
+                out["rem"][str(j)] = (
+                    clone_block(b, src, dst, stacked=False) if kind == "attn" else b
+                )
+        return out
+
+    return clone
+
+
 def scatter_prefill_attn(block, cache_block, page_ids, *, stacked: bool):
     """Scatter a contiguous prefill cache into pool pages.
 
@@ -196,18 +242,34 @@ def scatter_prefill_attn(block, cache_block, page_ids, *, stacked: bool):
 # --------------------------------------------------------------------------
 
 class PagedKVPool:
-    """Fixed-size page pool: free-list allocation + admission reservations.
+    """Fixed-size page pool: refcounted free-list + admission reservations.
 
     ``reserve`` is the admission-control primitive: it books a request's
     *worst-case* page need against the pool; ``alloc`` then hands out
     physical pages lazily (prefill pages at join, one page per crossed
     boundary during decode).  Because allocations never exceed the sum of
     reservations, lazy growth can never fail after admission succeeded.
-    ``release`` returns everything on completion (evict-on-EOS).
+    ``release`` drops one reference per attached page on completion
+    (evict-on-EOS); a page returns to the free list only when its last
+    referent lets go.
+
+    Prefix sharing adds two reference paths on top of ``alloc``'s owning
+    reference: :meth:`share` attaches an *existing* page to another
+    request (refcount +1, no free-list traffic), and :meth:`retain` /
+    :meth:`unretain` let a resident :class:`~repro.serve.fleet.prefix.
+    PrefixCache` keep pages alive after their writer finished.  When a
+    reservation cannot be met, the optional ``on_pressure`` hook (the
+    cache's LRU evictor) is asked to surrender resident pages before
+    admission fails.
+
+    ``materialize=False`` skips building the device arrays — the fleet
+    simulator runs thousands of admission/join/evict decisions through the
+    *real* accounting (this class, the scheduler, the prefix cache)
+    without paying for KV storage it never reads.
     """
 
     def __init__(self, cfg, n_slots: int, max_len: int, page: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None, materialize: bool = True):
         if max_len % page:
             raise ValueError(f"max_len {max_len} must be a multiple of page {page}")
         self.cfg = cfg
@@ -222,7 +284,13 @@ class PagedKVPool:
         self._free: List[int] = list(range(self.num_pages - 1, SCRATCH_PAGE, -1))
         self._reserved: Dict[Any, int] = {}    # rid -> pages still reservable
         self._allocated: Dict[Any, List[int]] = {}
-        self.blocks = init_pool_blocks(cfg, self.num_pages, page, n_slots)
+        self._ref: Dict[int, int] = {}         # page id -> reference count
+        # asked to free >= n resident pages; returns how many it freed
+        self.on_pressure: Optional[Any] = None
+        self.blocks = (
+            init_pool_blocks(cfg, self.num_pages, page, n_slots)
+            if materialize else None
+        )
 
     # ---- accounting ------------------------------------------------------
     def pages_needed(self, n_tokens: int) -> int:
@@ -243,15 +311,25 @@ class PagedKVPool:
         in_use = self.capacity_pages - len(self._free)
         return in_use / max(self.capacity_pages, 1)
 
+    def refcount(self, page_id: int) -> int:
+        return self._ref.get(page_id, 0)
+
     def can_admit(self, n_tokens: int) -> bool:
         return self.pages_needed(n_tokens) <= self.free_pages
 
     def reserve(self, rid, n_tokens: int) -> bool:
-        need = self.pages_needed(n_tokens)
+        return self.reserve_pages(rid, self.pages_needed(n_tokens))
+
+    def reserve_pages(self, rid, need: int) -> bool:
+        """Book ``need`` physical pages for ``rid`` (prefix-aware admission
+        reserves only the *unshared* remainder).  Under pressure the
+        resident-prefix evictor is asked to free pages before giving up."""
         if need > self.capacity_pages:
             raise ValueError(
                 f"request {rid!r} needs {need} pages, pool holds {self.capacity_pages}"
             )
+        if need > self.free_pages and self.on_pressure is not None:
+            self.on_pressure(need - self.free_pages)
         if need > self.free_pages:
             return False
         self._reserved[rid] = need
@@ -264,8 +342,44 @@ class PagedKVPool:
         ids = [self._free.pop() for _ in range(n)]
         self._reserved[rid] -= n
         self._allocated[rid].extend(ids)
+        for pid in ids:
+            self._ref[pid] = 1
         return ids
 
+    def share(self, rid, page_ids: List[int]) -> None:
+        """Attach already-allocated pages to ``rid`` (prefix reuse): one
+        reference each, released with the rest of ``rid``'s pages."""
+        if rid not in self._allocated:
+            raise RuntimeError(f"request {rid!r} has no reservation to share into")
+        for pid in page_ids:
+            if self._ref.get(pid, 0) <= 0:
+                raise RuntimeError(f"page {pid} is not live; cannot share")
+            self._ref[pid] += 1
+        self._allocated[rid].extend(page_ids)
+
+    def retain(self, page_ids: List[int]) -> None:
+        """Anonymous reference (prefix-cache residency): keeps pages out of
+        the free list after their writer releases."""
+        for pid in page_ids:
+            if self._ref.get(pid, 0) <= 0:
+                raise RuntimeError(f"page {pid} is not live; cannot retain")
+            self._ref[pid] += 1
+
+    def unretain(self, page_ids: List[int]) -> None:
+        for pid in page_ids:
+            self._drop_ref(pid)
+
+    def _drop_ref(self, pid: int) -> None:
+        n = self._ref.get(pid, 0)
+        if n <= 0:
+            raise RuntimeError(f"double free of page {pid}")
+        if n == 1:
+            del self._ref[pid]
+            self._free.append(pid)
+        else:
+            self._ref[pid] = n - 1
+
     def release(self, rid) -> None:
-        self._free.extend(reversed(self._allocated.pop(rid, [])))
+        for pid in reversed(self._allocated.pop(rid, [])):
+            self._drop_ref(pid)
         self._reserved.pop(rid, None)

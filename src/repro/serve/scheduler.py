@@ -43,11 +43,16 @@ class Request:
     eos_id: Optional[int] = None
     key: Optional[Any] = None                # per-request PRNG key (sampling)
     prefix_embeds: Optional[np.ndarray] = None   # (P, d) frontend prefix
+    session: Optional[int] = None            # session id (fleet traces)
+    out_script: Optional[np.ndarray] = None  # scripted continuation tokens
+    # (fleet *sim* replicas emit these instead of model logits; the real
+    # engine ignores them)
     rid: int = field(default_factory=lambda: next(_RID))
 
     # runtime state (engine-owned)
     slot: int = -1
     pages: List[int] = field(default_factory=list)
+    prefix_match: Optional[Any] = None       # PrefixMatch committed at admit
     out: List[int] = field(default_factory=list)
     t_admit: float = -1.0
     t_first: float = -1.0                    # first-token completion (TTFT end)
@@ -68,11 +73,14 @@ class Scheduler:
     """Arrival queue + slot/page admission for :class:`ContinuousEngine`."""
 
     def __init__(self, pool: PagedKVPool, n_slots: int, n_prefix: int = 0,
-                 slo=None):
+                 slo=None, prefix_cache=None):
         self.pool = pool
         self.n_slots = n_slots
         self.n_prefix = n_prefix
         self.slo = slo
+        # optional repro.serve.fleet.prefix.PrefixCache: admission becomes
+        # prefix-aware (matched full blocks are shared, not re-reserved)
+        self.prefix_cache = prefix_cache
         self._heap: List = []                # (arrival, rid, Request)
         self._free_slots: List[int] = list(range(n_slots))
         self.active: Dict[int, Request] = {}  # slot -> request
@@ -118,8 +126,31 @@ class Scheduler:
                 and len(self.active) < limit:
             req = self._heap[0][2]
             need = len(req.prompt) + self.n_prefix + req.max_new
-            if not self.pool.reserve(req.rid, need):
+            need_pages = self.pool.pages_needed(need)
+            match, shared = None, []
+            if self.prefix_cache is not None:
+                # prefix-aware admission: matched full blocks are shared
+                # references, so only the unshared remainder is reserved
+                # (the CoW clone of a partial hit is part of that remainder)
+                match = self.prefix_cache.match(req.prompt)
+                shared = list(match.full_pages)
+                if match.partial_page is not None:
+                    shared.append(match.partial_page)
+                need_pages -= len(match.full_pages)
+                # pin the matched pages: reservation pressure may evict
+                # their trie nodes, but the pages must outlive this window
+                self.pool.retain(shared)
+            if not self.pool.reserve_pages(req.rid, need_pages):
+                if shared:
+                    self.pool.unretain(shared)
                 break                                  # FIFO: wait for pages
+            if match is not None:
+                # commit: one reference per shared page rides the request,
+                # released with the rest of its pages; drop the pin
+                if shared:
+                    self.pool.share(req.rid, shared)
+                    self.pool.unretain(shared)
+                req.prefix_match = match
             heapq.heappop(self._heap)
             req.slot = self._free_slots.pop()
             req.t_admit = now

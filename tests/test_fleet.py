@@ -1,0 +1,384 @@
+"""Fleet subsystem: prefix cache, router, autoscaler, watt arbitration.
+
+The two load-bearing guarantees pinned here:
+
+* **determinism** — same trace + seed through :class:`FleetSim` gives the
+  identical dispatch sequence and bit-identical per-replica
+  ``GovernorReport`` dicts (the reproducibility contract the energy
+  numbers rest on);
+* **refcount safety** — the prefix cache's shared/retained pages never
+  double-free or leak under arbitrary join / retire / pressure-eviction
+  interleavings (property test).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.serve import PagedKVPool, Request
+from repro.serve.fleet import (
+    Autoscaler,
+    FleetConfig,
+    FleetRouter,
+    FleetSim,
+    PrefixCache,
+    ReplicaView,
+    SimReplica,
+    diurnal_trace,
+    flash_crowd_trace,
+    session_reuse_trace,
+)
+
+
+def _cfg():
+    return reduced(get_config("llama3.2-1b"))
+
+
+# --------------------------------------------------------------------------
+# prefix cache: trie residency, matching, eviction
+# --------------------------------------------------------------------------
+
+def test_prefix_match_insert_and_cow_partial():
+    pool = PagedKVPool(_cfg(), n_slots=2, max_len=32, page=8, num_pages=17,
+                       materialize=False)
+    cache = PrefixCache(pool, max_pages=8)
+    assert pool.reserve_pages("w", 3)
+    pages = pool.alloc("w", 3)
+    tokens = np.arange(1, 21)                       # 20 tokens: 2 full + 4 partial
+    assert cache.insert(tokens, pages) == 3
+    pool.release("w")
+    # resident pages survived their writer's release
+    assert all(pool.refcount(p) == 1 for p in pages)
+
+    m = cache.match(np.arange(1, 41))               # same 20-token prefix
+    assert m.n_tokens == 20
+    assert m.full_pages == pages[:2]
+    assert m.partial_page == pages[2] and m.partial_len == 4
+
+    # the cap: a prompt equal to the resident sequence matches len-1 only,
+    # so the partial page (4 written tokens > 3 usable) is refused
+    m = cache.match(tokens)
+    assert m.n_tokens == 16 and m.partial_page is None
+
+    # peek is side-effect free
+    lookups = cache.n_lookups
+    assert cache.peek(np.arange(1, 41)) == 20
+    assert cache.n_lookups == lookups
+
+
+def test_prefix_pressure_eviction_unblocks_admission():
+    pool = PagedKVPool(_cfg(), n_slots=2, max_len=32, page=8, num_pages=9,
+                       materialize=False)
+    cache = PrefixCache(pool, max_pages=8)
+    assert pool.reserve_pages("w", 6)
+    pages = pool.alloc("w", 6)
+    cache.insert(np.arange(1, 49), pages)
+    pool.release("w")
+    assert cache.n_resident_pages == 6 and pool.free_pages == 2
+    # a 5-page reservation only fits if the pool pressures the cache
+    assert pool.reserve_pages("big", 5)
+    assert cache.n_evictions >= 3
+    pool.release("big")
+    cache.clear()
+    assert pool.free_pages == pool.capacity_pages
+
+
+def test_prefix_shared_page_survives_eviction_until_release():
+    pool = PagedKVPool(_cfg(), n_slots=2, max_len=32, page=8, num_pages=9,
+                       materialize=False)
+    cache = PrefixCache(pool, max_pages=4)
+    assert pool.reserve_pages("w", 2)
+    pages = pool.alloc("w", 2)
+    cache.insert(np.arange(1, 17), pages)
+    pool.release("w")
+    # a reader shares the resident pages, then the cache is fully evicted:
+    # the pages must stay allocated for the reader
+    assert pool.reserve_pages("r", 0)
+    pool.share("r", pages)
+    cache.clear()
+    assert all(pool.refcount(p) == 1 for p in pages)
+    pool.release("r")
+    assert pool.free_pages == pool.capacity_pages
+
+
+# --------------------------------------------------------------------------
+# router
+# --------------------------------------------------------------------------
+
+def test_router_prefers_prefix_then_free_pages_ties_to_lowest_id():
+    pool = PagedKVPool(_cfg(), n_slots=2, max_len=32, page=8, num_pages=9,
+                       materialize=False)
+    cache = PrefixCache(pool)
+    assert pool.reserve_pages("w", 2)
+    cache.insert(np.arange(1, 17), pool.alloc("w", 2))
+    pool.release("w")
+
+    def view(rid, c, n_active=0):
+        return ReplicaView(replica_id=rid, n_slots=4, n_active=n_active,
+                           n_queued=0, free_pages=8, capacity_pages=8,
+                           prefix_cache=c)
+
+    empty = PrefixCache(PagedKVPool(_cfg(), 2, 32, 8, 9, materialize=False))
+    router = FleetRouter()
+    req = Request(prompt=np.arange(1, 25, dtype=np.int32), max_new=4,
+                  arrival=0.0)
+    dec = router.route(req, [view(0, empty), view(1, cache)])
+    assert dec.replica_id == 1 and dec.matched_tokens == 16
+    assert router.n_prefix_routed == 1
+    # no prefix signal anywhere: load breaks the tie...
+    req2 = Request(prompt=np.full(24, 999, np.int32), max_new=4, arrival=0.0)
+    dec = router.route(req2, [view(0, empty, n_active=4), view(1, cache)])
+    assert dec.replica_id == 1
+    # ...and a dead tie goes to the lowest replica id (determinism)
+    dec = router.route(req2, [view(1, empty), view(0, empty)])
+    assert dec.replica_id == 0
+
+
+def test_fleet_determinism_dispatch_and_bit_identical_reports():
+    trace = flash_crowd_trace(duration_s=10, seed=3)
+    runs = []
+    for _ in range(2):
+        fc = FleetConfig(cfg=_cfg(), n_replicas=2, autoscale=True,
+                         min_replicas=1, cap_w=40.0, floor_w=4.0,
+                         step_s=0.01, ttft_target=1.5)
+        sim = FleetSim(fc)
+        res = sim.run(trace)
+        runs.append((
+            [d.replica_id for d in sim.router.decisions],
+            res.reports,
+            res.energy_j,
+        ))
+    assert runs[0][0] == runs[1][0]          # identical dispatch sequence
+    assert runs[0][1] == runs[1][1]          # bit-identical GovernorReports
+    assert runs[0][2] == runs[1][2]
+
+
+# --------------------------------------------------------------------------
+# autoscaler
+# --------------------------------------------------------------------------
+
+def test_autoscaler_max_replicas_clamped_to_watt_floor():
+    a = Autoscaler(max_replicas=10, cap_w=40.0, floor_w=6.0)
+    assert a.max_replicas == 6               # floor(40/6): arbiter would raise
+    assert Autoscaler(min_replicas=9, max_replicas=10, cap_w=40.0,
+                      floor_w=6.0).min_replicas == 6
+
+
+def test_autoscaler_hysteresis_and_cooldown():
+    a = Autoscaler(max_replicas=4, ttft_target=0.5, cooldown_epochs=2,
+                   down_consecutive=3)
+    assert a.decide(0, 1, ttft_p95=0.9, fill_mean=0.9, n_queued=0) == +1
+    # cooldown holds the next epoch even under pressure
+    assert a.decide(1, 2, ttft_p95=0.9, fill_mean=0.9, n_queued=0) == 0
+    # quiet epochs must accumulate before a down fires
+    for e in (2, 3):
+        assert a.decide(e, 2, ttft_p95=0.0, fill_mean=0.1, n_queued=0) == 0
+    assert a.decide(4, 2, ttft_p95=0.0, fill_mean=0.1, n_queued=0) == -1
+    # one hot epoch resets the streak
+    for e in (5, 6):
+        a.decide(e, 1, ttft_p95=0.0, fill_mean=0.1, n_queued=0)
+
+
+def test_autoscaled_fleet_caps_and_dynamics():
+    """The bench headline invariants: ups AND downs fire on the diurnal
+    trace, the granted watts never exceed the cluster cap across
+    membership changes, and every request completes."""
+    trace = diurnal_trace(duration_s=60, base_rate=2.0, peak_ratio=8, seed=0)
+    fc = FleetConfig(cfg=_cfg(), n_replicas=3, autoscale=True, min_replicas=1,
+                     cap_w=40.0, floor_w=4.0, step_s=0.01, ttft_target=1.5)
+    res = FleetSim(fc).run(trace)
+    assert res.n_completed == res.n_requests
+    assert res.n_scale_ups > 0 and res.n_scale_downs > 0
+    assert res.max_alloc_sum_w <= res.cap_w + 1e-9
+    assert res.n_replicas_peak == 3
+    assert all(e["alloc_sum_w"] <= res.cap_w + 1e-9 for e in res.epochs)
+
+
+def test_session_reuse_hits_prefix_cache():
+    fc = FleetConfig(cfg=_cfg(), n_replicas=2, autoscale=False,
+                     cap_w=40.0, floor_w=4.0, step_s=0.01, ttft_target=1.5)
+    res = FleetSim(fc).run(session_reuse_trace(seed=1))
+    assert res.n_completed == res.n_requests
+    assert res.prefix_hit_rate > 0.3         # dialogue resends are the point
+    assert res.prefix_hits > 0
+
+
+# --------------------------------------------------------------------------
+# refcounted free list: never double-frees, never leaks (property test)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=30)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(1, 30),
+                          st.integers(0, 6)),
+                min_size=1, max_size=30))
+def test_refcount_free_list_never_double_frees(ops):
+    """Arbitrary interleavings of prefix-aware admission (match -> pin ->
+    reserve -> share -> CoW alloc -> insert -> release) with pressure
+    eviction keep every page's refcount consistent: a double free raises
+    inside the pool, and after teardown every page is back on the free
+    list exactly once."""
+    pool = PagedKVPool(_cfg(), n_slots=4, max_len=64, page=8, num_pages=17,
+                       materialize=False)
+    cache = PrefixCache(pool, max_pages=8)
+    live = []
+    rid = 0
+    for base, length, evict_n in ops:
+        if evict_n and len(live) > 2:        # retire the oldest live request
+            old, pages, tokens = live.pop(0)
+            cache.insert(tokens, pages)
+            pool.release(old)
+        # heavily colliding prompts so matches / shares / CoW all occur
+        prompt = np.array([(base + j) % 7 + 1 for j in range(length)],
+                          np.int32)
+        m = cache.match(prompt)
+        shared = list(m.full_pages)
+        if m.partial_page is not None:
+            shared.append(m.partial_page)
+        need = pool.pages_needed(len(prompt)) - len(m.full_pages)
+        pool.retain(shared)                  # pin across the pressure window
+        rid += 1
+        if not pool.reserve_pages(rid, need):
+            pool.unretain(shared)
+            continue
+        pages = list(m.full_pages)
+        if shared:
+            pool.share(rid, shared)
+            pool.unretain(shared)
+        if m.partial_page is not None:
+            pages.extend(pool.alloc(rid, 1))          # CoW clone
+        rest = pool.pages_needed(len(prompt)) - len(pages)
+        if rest > 0:
+            pages.extend(pool.alloc(rid, rest))
+        live.append((rid, pages, prompt))
+        # invariant: free pages carry zero refs, live pages positive refs
+        for pid in pool._free:
+            assert pool.refcount(pid) == 0
+        assert all(n >= 0 for n in pool._ref.values())
+    for old, pages, tokens in live:
+        cache.insert(tokens, pages)
+        pool.release(old)
+    cache.clear()
+    assert pool.free_pages == pool.capacity_pages
+    assert sorted(pool._free) == list(range(1, pool.num_pages))
+
+
+def test_pool_double_free_raises():
+    pool = PagedKVPool(_cfg(), n_slots=2, max_len=32, page=8, num_pages=9,
+                       materialize=False)
+    assert pool.reserve_pages("a", 1)
+    (pid,) = pool.alloc("a", 1)
+    pool.release("a")
+    with pytest.raises(RuntimeError, match="double free"):
+        pool.unretain([pid])
+
+
+# --------------------------------------------------------------------------
+# replica lifecycle + arbiter sample surface
+# --------------------------------------------------------------------------
+
+def test_sim_replica_prefix_join_replays_suffix_and_reinserts():
+    rep = SimReplica(0, _cfg(), n_slots=2, max_len=64, page=8, step_s=1e-3)
+    prompt = np.arange(1, 25, dtype=np.int32)
+    script = np.arange(100, 108, dtype=np.int32)
+    rep.submit(Request(prompt=prompt, max_new=8, arrival=0.0,
+                       out_script=script))
+    rep.advance_to(1.0)
+    assert rep.prefix_cache.n_insertions == 1
+    # second identical prompt matches, replays the suffix forced, and
+    # produces the same scripted output
+    rep.submit(Request(prompt=prompt, max_new=8, arrival=1.0,
+                       out_script=script))
+    rep.advance_to(2.0)
+    assert rep.prefix_cache.n_hits == 1
+    assert [list(r.out) for r in rep.finished] == [list(script)] * 2
+
+
+def test_job_sample_surfaces_slo_and_prefix_counters():
+    rep = SimReplica(0, _cfg(), n_slots=2, max_len=64, page=8, step_s=1e-3)
+    prompt = np.arange(1, 25, dtype=np.int32)
+    for t in (0.0, 0.5):
+        rep.submit(Request(prompt=prompt, max_new=4, arrival=t))
+    rep.advance_to(1.0)
+    s = rep.job_sample(0.25)
+    assert s.ttft_p50 > 0.0 and s.tpot_p50 > 0.0
+    assert s.prefix_lookups == 2 and s.prefix_hits == 1
+    assert 0.0 < s.prefix_hit_rate <= 1.0
+    d = s  # JobSample is the arbiter wire format: fields must exist
+    for name in ("ttft_p99", "tpot_p99", "prefix_hit_rate"):
+        assert hasattr(d, name)
+
+
+def test_serve_job_sample_carries_slo_and_prefix(monkeypatch):
+    from types import SimpleNamespace
+
+    from repro.cluster.job import ServeJob
+    from repro.core.governor import Governor
+    from repro.serve import SLOTracker
+
+    slo = SLOTracker()
+    req = SimpleNamespace(arrival=0.0, t_first=None, t_prev=None, out=[1])
+    slo.on_first_token(req, 0.125)
+    cache = SimpleNamespace(n_hits=3, n_lookups=4, hit_rate=0.5)
+    engine = SimpleNamespace(prefix_cache=cache)
+    job = ServeJob("svc", engine, Governor(), cap_w=10.0, slo=slo)
+    s = job.last_sample()
+    assert s.ttft_p50 == pytest.approx(0.125)
+    assert s.prefix_hits == 3 and s.prefix_lookups == 4
+    assert s.prefix_hit_rate == 0.5
+
+
+# --------------------------------------------------------------------------
+# real engine: prefix-cache joins are output-equivalent to cold prefill
+# --------------------------------------------------------------------------
+
+def test_engine_prefix_cache_outputs_match_cold_path(rng_key):
+    """Shared-prefix requests served through prefix joins (shared pages +
+    CoW clone + forced suffix replay) must produce exactly the tokens the
+    cache-off engine produces — the bitwise K/V-prefix claim, end to end."""
+    from repro.models import init_params
+    from repro.serve import ContinuousEngine
+
+    cfg = _cfg()
+    params = init_params(cfg, rng_key)
+    shared = np.arange(1, 17, dtype=np.int32)
+    prompts = [np.concatenate([shared, np.full(4, 40 + i, np.int32)])
+               for i in range(3)]
+
+    def serve(with_cache):
+        eng = ContinuousEngine(cfg, params, n_slots=2, max_len=64, page=8,
+                               temperature=0.0)
+        if with_cache:
+            eng.enable_prefix_cache()
+        reqs = [Request(prompt=p, max_new=6, arrival=0.02 * i)
+                for i, p in enumerate(prompts)]
+        done = eng.serve(reqs)
+        outs = {tuple(r.prompt.tolist()): list(r.out) for r in done}
+        hits = eng.prefix_cache.n_hits if with_cache else 0
+        return outs, hits
+
+    cold, _ = serve(False)
+    warm, hits = serve(True)
+    assert hits > 0                          # the cache actually engaged
+    assert warm == cold                      # token-for-token identical
+
+
+# --------------------------------------------------------------------------
+# lazy exports (PEP 562)
+# --------------------------------------------------------------------------
+
+def test_serve_lazy_exports_and_dir():
+    import importlib
+
+    import repro.serve as serve
+
+    serve = importlib.reload(serve)
+    listing = dir(serve)
+    for name in ("ContinuousEngine", "FleetSim", "PrefixCache", "FleetRouter",
+                 "Autoscaler", "diurnal_trace", "run_engine_fleet", "fleet",
+                 "kvcache", "scheduler"):
+        assert name in listing, name
+    # lazy resolution works and is cached
+    assert serve.FleetRouter is FleetRouter
+    assert serve.fleet.FleetSim is FleetSim
+    with pytest.raises(AttributeError):
+        serve.not_a_symbol
