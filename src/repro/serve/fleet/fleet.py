@@ -72,6 +72,18 @@ class FleetConfig:
     policy: Policy = COUNTDOWN_SLACK
     max_epochs: int = 100_000
 
+    def __post_init__(self):
+        # min_replicas == 0 would start an autoscaled fleet with zero
+        # routable replicas: the router raises on the first arrival long
+        # before the autoscaler could warm anything
+        if self.min_replicas < 1:
+            raise ValueError(
+                f"min_replicas must be >= 1, got {self.min_replicas}")
+        if self.n_replicas < self.min_replicas:
+            raise ValueError(
+                f"n_replicas {self.n_replicas} < min_replicas "
+                f"{self.min_replicas}")
+
 
 @dataclass
 class FleetResult:
@@ -367,14 +379,17 @@ def run_engine_fleet(engines, requests, *, cap_w: float, floor_w: float,
     i = 0
     next_epoch = epoch_s
     steps = 0
+    stalls = 0
     while True:
         now = _time.monotonic() - t_start
+        routed = False
         while i < len(pending) and pending[i].arrival <= now:
             req = pending[i]
             dec = router.route(
                 req, [session_view(s, k) for k, s in enumerate(sessions)])
             sessions[dec.replica_id].submit(req)
             i += 1
+            routed = True
         any_active = False
         for sess in sessions:
             sess.admit()
@@ -384,6 +399,8 @@ def run_engine_fleet(engines, requests, *, cap_w: float, floor_w: float,
                 steps += 1
         if steps > max_steps:
             raise RuntimeError(f"fleet exceeded {max_steps} decode steps")
+        if routed or any_active:
+            stalls = 0
         if _time.monotonic() - t_start >= next_epoch:
             samples = []
             for k, gov in enumerate(governors):
@@ -413,6 +430,22 @@ def run_engine_fleet(engines, requests, *, cap_w: float, floor_w: float,
         wait = (t_start + min(targets)) - t0
         if wait > 0:
             _time.sleep(min(wait, epoch_s))
+            stalls = 0
+        else:
+            # every replica idle yet the next target is already due: only
+            # routing or admission can make progress, and neither did this
+            # round.  A queued request whose admission keeps failing (e.g.
+            # pool pages pinned elsewhere) would otherwise busy-spin here
+            # forever — decode steps never increment, so the max_steps
+            # guard can't trip.  Bound the spin and fail loudly instead.
+            stalls += 1
+            if stalls > 10_000:
+                queued = sum(s.n_queued for s in sessions)
+                raise RuntimeError(
+                    "fleet stalled: all replicas idle with a due arrival "
+                    f"that cannot be admitted ({queued} queued, "
+                    f"{len(pending) - i} unrouted) — likely page-pool "
+                    "exhaustion by pinned/resident pages")
         t1 = _time.monotonic()
         for s in sessions:
             s.note_idle(t0, t1)

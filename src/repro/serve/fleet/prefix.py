@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -64,12 +64,18 @@ class PrefixMatch:
 
     ``n_tokens = page * len(full_pages) + partial_len``; ``partial_page``
     (when set) must be copy-on-write cloned by the joiner before writing.
+    ``match`` is a side-effect-free trial — the caller passes the match
+    back through :meth:`PrefixCache.commit` once the admission that used
+    it actually succeeds, which is when lookup/hit counters and LRU
+    clocks move.
     """
 
     n_tokens: int = 0
     full_pages: List[int] = field(default_factory=list)
     partial_page: Optional[int] = None
     partial_len: int = 0
+    n_prompt: int = 0                       # looked-up prompt length
+    nodes: List["_Node"] = field(default_factory=list)   # for commit's LRU
 
 
 class PrefixCache:
@@ -137,28 +143,41 @@ class PrefixCache:
     def match(self, prompt: Sequence[int]) -> PrefixMatch:
         """Longest resident prefix of ``prompt`` (capped at ``len - 1``).
 
-        Touches LRU clocks but takes **no** references — the scheduler
-        commits the match with :meth:`PagedKVPool.share` only once the
-        request's reservation succeeds.
+        A side-effect-free *trial*: no references taken, no counters
+        moved, no LRU touched.  The scheduler commits the match — pages
+        via :meth:`PagedKVPool.share`, statistics and LRU clocks via
+        :meth:`commit` — only once the request's reservation succeeds.
+        A head-of-line-blocked request can therefore re-try its match
+        every poll without deflating ``hit_rate`` or unfairly keeping
+        its (blocked) prefix resident.
         """
         prompt = np.asarray(prompt)
-        self.n_lookups += 1
-        self.tokens_looked_up += len(prompt)
         chain, partial = self._walk(prompt, limit=len(prompt) - 1)
-        self._clock += 1
-        for node in chain:
-            node.last_use = self._clock
-        m = PrefixMatch(full_pages=[n.page_id for n in chain])
+        m = PrefixMatch(full_pages=[n.page_id for n in chain],
+                        n_prompt=len(prompt), nodes=list(chain))
         m.n_tokens = self.page * len(chain)
         if partial is not None:
-            partial.last_use = self._clock
+            m.nodes.append(partial)
             m.partial_page = partial.page_id
             m.partial_len = partial.n_tokens
             m.n_tokens += partial.n_tokens
-        if m.n_tokens:
-            self.n_hits += 1
-            self.tokens_matched += m.n_tokens
         return m
+
+    def commit(self, match: PrefixMatch) -> None:
+        """Book a trial :meth:`match` that admission actually used: count
+        the lookup (and hit, if any tokens matched) and refresh the
+        matched nodes' LRU clocks.  Call exactly once per admitted
+        request, after its page reservation succeeds.  Touching a node
+        the reservation's pressure eviction already detached is a no-op —
+        the shared pages themselves were pinned across that window."""
+        self.n_lookups += 1
+        self.tokens_looked_up += match.n_prompt
+        self._clock += 1
+        for node in match.nodes:
+            node.last_use = self._clock
+        if match.n_tokens:
+            self.n_hits += 1
+            self.tokens_matched += match.n_tokens
 
     # ---- insertion -------------------------------------------------------
     def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> int:
@@ -166,12 +185,18 @@ class PrefixCache:
         sequence (prompt + generated), ``pages`` its page table in order.
         Pages backing *new* trie nodes are retained (they survive the
         request's release); pages duplicating existing nodes are left to
-        die with the request.  Returns the number of pages adopted."""
+        die with the request.  Nodes on the insertion path (walked or
+        just created) are shielded from the capacity eviction below —
+        evicting the chain tip about to receive a child would detach the
+        child from the root, leaking its retained page forever.  When
+        every evictable leaf is on the path, adoption stops instead.
+        Returns the number of pages adopted."""
         tokens = np.asarray(tokens)
         adopted = 0
         node = self._root
         pos = 0
         self._clock += 1
+        path: Set[int] = set()
         for i, pid in enumerate(pages):
             n_left = len(tokens) - pos
             if n_left <= 0:
@@ -180,7 +205,8 @@ class PrefixCache:
                 key = tuple(int(t) for t in tokens[pos:pos + self.page])
                 child = node.children.get(key)
                 if child is None:
-                    if self._n_resident >= self.max_pages and not self._evict_one():
+                    if self._n_resident >= self.max_pages \
+                            and not self._evict_one(protect=path):
                         break
                     child = _Node(tokens=key, page_id=pid, parent=node,
                                   n_tokens=self.page)
@@ -189,13 +215,15 @@ class PrefixCache:
                     self._n_resident += 1
                     adopted += 1
                 child.last_use = self._clock
+                path.add(child.node_id)
                 node = child
                 pos += self.page
             else:
                 key = tuple(int(t) for t in tokens[pos:])
                 leaf = node.partials.get(key)
                 if leaf is None:
-                    if self._n_resident >= self.max_pages and not self._evict_one():
+                    if self._n_resident >= self.max_pages \
+                            and not self._evict_one(protect=path):
                         break
                     leaf = _Node(tokens=key, page_id=pid, parent=node,
                                  n_tokens=n_left)
@@ -222,9 +250,13 @@ class PrefixCache:
                     out.append(child)
         return out
 
-    def _evict_one(self) -> bool:
-        """Drop the least-recently-used evictable leaf (ties: oldest node)."""
-        leaves = self._leaves()
+    _NO_PROTECT: FrozenSet[int] = frozenset()
+
+    def _evict_one(self, protect: FrozenSet[int] = _NO_PROTECT) -> bool:
+        """Drop the least-recently-used evictable leaf (ties: oldest node).
+        ``protect`` names node_ids that must survive — the current
+        insertion path, whose tip is about to be given a child."""
+        leaves = [n for n in self._leaves() if n.node_id not in protect]
         if not leaves:
             return False
         victim = min(leaves, key=lambda n: (n.last_use, n.node_id))

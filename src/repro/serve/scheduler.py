@@ -131,7 +131,9 @@ class Scheduler:
             if self.prefix_cache is not None:
                 # prefix-aware admission: matched full blocks are shared
                 # references, so only the unshared remainder is reserved
-                # (the CoW clone of a partial hit is part of that remainder)
+                # (the CoW clone of a partial hit is part of that remainder).
+                # match() is a stats-free trial — a head-of-line-blocked
+                # request re-tries it every poll without skewing hit_rate
                 match = self.prefix_cache.match(req.prompt)
                 shared = list(match.full_pages)
                 if match.partial_page is not None:
@@ -146,10 +148,12 @@ class Scheduler:
                 break                                  # FIFO: wait for pages
             if match is not None:
                 # commit: one reference per shared page rides the request,
-                # released with the rest of its pages; drop the pin
+                # released with the rest of its pages; drop the pin.  Only
+                # now do lookup/hit counters and LRU clocks move
                 if shared:
                     self.pool.share(req.rid, shared)
                     self.pool.unretain(shared)
+                self.prefix_cache.commit(match)
                 req.prefix_match = match
             heapq.heappop(self._heap)
             req.slot = self._free_slots.pop()

@@ -83,6 +83,82 @@ def test_prefix_pressure_eviction_unblocks_admission():
     assert pool.free_pages == pool.capacity_pages
 
 
+def _reachable_nodes(cache) -> int:
+    """Resident trie nodes actually reachable from the root — must equal
+    ``_n_resident`` or eviction can never reclaim the orphans' pages."""
+    n = 0
+    stack = [cache._root]
+    while stack:
+        node = stack.pop()
+        kids = list(node.children.values()) + list(node.partials.values())
+        n += len(kids)
+        stack.extend(node.children.values())
+    return n
+
+
+def test_insert_at_capacity_never_detaches_own_path():
+    """Extending a resident chain at max_pages must not evict the chain
+    tip being extended: the new node would attach to a detached parent,
+    unreachable from the root — a page leaked until process exit."""
+    pool = PagedKVPool(_cfg(), n_slots=2, max_len=64, page=8, num_pages=17,
+                       materialize=False)
+    cache = PrefixCache(pool, max_pages=2)
+    assert pool.reserve_pages("a", 2)
+    cache.insert(np.arange(1, 17), pool.alloc("a", 2))    # 2 full pages
+    pool.release("a")
+    assert cache.n_resident_pages == 2
+    # same lineage, longer: at capacity the only LRU leaves ARE the path,
+    # so adoption must stop rather than evict its own parent chain
+    assert pool.reserve_pages("b", 4)
+    cache.insert(np.arange(1, 31), pool.alloc("b", 4))
+    pool.release("b")
+    assert _reachable_nodes(cache) == cache.n_resident_pages == 2
+    cache.clear()                       # every resident page is reclaimable
+    assert cache.n_resident_pages == 0
+    assert pool.free_pages == pool.capacity_pages
+
+
+def test_insert_at_capacity_evicts_off_path_leaf():
+    """With an unrelated LRU leaf available, a capacity insert evicts
+    *that* leaf (not its own path) and the new lineage is adopted."""
+    pool = PagedKVPool(_cfg(), n_slots=2, max_len=64, page=8, num_pages=17,
+                       materialize=False)
+    cache = PrefixCache(pool, max_pages=2)
+    assert pool.reserve_pages("cold", 1)
+    cache.insert(np.arange(50, 58), pool.alloc("cold", 1))   # unrelated leaf
+    pool.release("cold")
+    assert pool.reserve_pages("hot", 2)
+    assert cache.insert(np.arange(1, 17), pool.alloc("hot", 2)) == 2
+    pool.release("hot")
+    assert cache.n_evictions == 1       # the cold leaf made room
+    assert _reachable_nodes(cache) == cache.n_resident_pages == 2
+    cache.clear()
+    assert pool.free_pages == pool.capacity_pages
+
+
+def test_match_stats_commit_only_on_admission():
+    """A trial match is stats-free; commit() books it exactly once — so a
+    head-of-line-blocked request polling match() every round cannot
+    deflate hit_rate or refresh LRU for a prefix it never joined."""
+    pool = PagedKVPool(_cfg(), n_slots=2, max_len=32, page=8, num_pages=9,
+                       materialize=False)
+    cache = PrefixCache(pool, max_pages=4)
+    assert pool.reserve_pages("w", 2)
+    pages = pool.alloc("w", 2)
+    cache.insert(np.arange(1, 17), pages)
+    pool.release("w")
+    clock = cache._clock
+    for _ in range(5):                  # five failed-admission polls
+        m = cache.match(np.arange(1, 25))
+    assert m.n_tokens == 16
+    assert cache.n_lookups == 0 and cache.tokens_looked_up == 0
+    assert cache.n_hits == 0 and cache._clock == clock
+    cache.commit(m)                     # the poll that finally admitted
+    assert cache.n_lookups == 1 and cache.tokens_looked_up == 24
+    assert cache.n_hits == 1 and cache.tokens_matched == 16
+    assert cache.hit_rate == pytest.approx(16 / 24)
+
+
 def test_prefix_shared_page_survives_eviction_until_release():
     pool = PagedKVPool(_cfg(), n_slots=2, max_len=32, page=8, num_pages=9,
                        materialize=False)
@@ -179,6 +255,15 @@ def test_autoscaler_hysteresis_and_cooldown():
         a.decide(e, 1, ttft_p95=0.0, fill_mean=0.1, n_queued=0)
 
 
+def test_fleet_config_rejects_zero_min_replicas():
+    """min_replicas == 0 would start an autoscaled fleet with no routable
+    replica: the router raises on the very first arrival."""
+    with pytest.raises(ValueError, match="min_replicas"):
+        FleetConfig(cfg=_cfg(), n_replicas=2, autoscale=True, min_replicas=0)
+    with pytest.raises(ValueError, match="min_replicas"):
+        FleetConfig(cfg=_cfg(), n_replicas=1, min_replicas=2)
+
+
 def test_autoscaled_fleet_caps_and_dynamics():
     """The bench headline invariants: ups AND downs fire on the diurnal
     trace, the granted watts never exceed the cluster cap across
@@ -227,6 +312,8 @@ def test_refcount_free_list_never_double_frees(ops):
             old, pages, tokens = live.pop(0)
             cache.insert(tokens, pages)
             pool.release(old)
+            # no insert may orphan a retained node from the root
+            assert _reachable_nodes(cache) == cache.n_resident_pages
         # heavily colliding prompts so matches / shares / CoW all occur
         prompt = np.array([(base + j) % 7 + 1 for j in range(length)],
                           np.int32)
@@ -244,6 +331,7 @@ def test_refcount_free_list_never_double_frees(ops):
         if shared:
             pool.share(rid, shared)
             pool.unretain(shared)
+        cache.commit(m)                      # stats/LRU move only on success
         if m.partial_page is not None:
             pages.extend(pool.alloc(rid, 1))          # CoW clone
         rest = pool.pages_needed(len(prompt)) - len(pages)
@@ -257,7 +345,9 @@ def test_refcount_free_list_never_double_frees(ops):
     for old, pages, tokens in live:
         cache.insert(tokens, pages)
         pool.release(old)
+        assert _reachable_nodes(cache) == cache.n_resident_pages
     cache.clear()
+    assert cache.n_resident_pages == 0
     assert pool.free_pages == pool.capacity_pages
     assert sorted(pool._free) == list(range(1, pool.num_pages))
 
