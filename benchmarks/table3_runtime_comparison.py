@@ -60,6 +60,11 @@ def run(full: bool = True) -> dict:
                 **table["avg"][pol]
             ),
         )
+    # the predictive axis: prediction-only strawman vs fixed / adaptive /
+    # guarded hybrid on the three golden stream families (DESIGN.md §12)
+    from benchmarks.bench_runtime import table3 as predictive_table3
+
+    table["predictive"] = predictive_table3()
     save_json("table3_runtime_comparison", table)
     return table
 

@@ -21,7 +21,9 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 sys.path.insert(0, os.path.join(REPO, "tests"))
 
-from golden_common import CANNED, GOLDEN_POLICY_NAMES, report_dict  # noqa: E402
+from golden_common import (CANNED, GOLDEN_POLICY_NAMES,  # noqa: E402
+                           PREDICTIVE_POLICY_NAMES, predictive_entry,
+                           report_dict)
 from repro.core.policies import ALL_POLICIES  # noqa: E402
 
 GOLDEN_DIR = os.path.join(REPO, "tests", "goldens")
@@ -58,6 +60,22 @@ def main() -> None:
             json.dump(payload, f, indent=1, sort_keys=True)
             f.write("\n")
         print(f"wrote {path} ({len(payload['policies'])} policies)")
+    # the predictive pair (hybrid + prediction-only strawman) pins into its
+    # own fixture so the fixed-policy goldens stay byte-identical across the
+    # predictive subsystem's evolution
+    payload = {
+        "policies": {
+            name: {kind: predictive_entry(ALL_POLICIES[name], kind)
+                   for kind in CANNED}
+            for name in PREDICTIVE_POLICY_NAMES
+        },
+    }
+    path = os.path.join(GOLDEN_DIR, "predictive.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path} ({len(payload['policies'])} policies x "
+          f"{len(CANNED)} streams)")
 
 
 if __name__ == "__main__":

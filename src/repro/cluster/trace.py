@@ -15,19 +15,24 @@ what-if loop the cap arbiter is tuned against.
 
 Record kinds (one JSON object per line; line 1 is the header):
 
-  {"k": "hdr", "version": 2, "meta": {...}}
+  {"k": "hdr", "version": 3, "meta": {...}}
   {"k": "ev",    "rank": R, "phase": P, "call": C, "t": T}
   {"k": "phase", "rank": R, "call": C, "t0": .., "t1": .., "t2": .., "site": S?}
   {"k": "act",   "t": T, "rank": R, "action": A, "call": C, "slack": S}
   {"k": "theta", "t": T, "site": S, "rank": R, "before": .., "after": ..,
                  "reason": "decay"|"raise", "obs": ..}
+  {"k": "pred",  "t": T, "site": S, "rank": R, "kind": "prearm"|"mispredict"
+                 |"trip", "predicted": .., "observed": .., "cost": ..,
+                 "source": "forest"|"ema"|""}
 
 Version history: v1 was the 3-phase taxonomy without tuner records; v2 adds
 the 5-phase events (``dispatch_enter``/``wait_enter``), the optional
-``site`` on ingested phases, and ``theta`` tuner-decision records.  v1
-traces still load (they are a strict subset of v2).  ``theta`` and ``act``
-records are *outputs* of the live governor: replay re-derives both, and the
-differential test asserts the re-derived stream matches the recorded one.
+``site`` on ingested phases, and ``theta`` tuner-decision records; v3 adds
+``pred`` predictor-decision records (pre-arms, guard bookings, guard trips
+from the cntd_predictive hybrid).  v1/v2 traces still load (each is a
+strict subset of its successor).  ``theta``, ``act`` and ``pred`` records
+are *outputs* of the live governor: replay re-derives all three, and the
+differential tests assert the re-derived streams match the recorded ones.
 
 Floats round-trip through ``repr`` so replay sees the identical bits.
 """
@@ -44,10 +49,10 @@ from repro.core.governor import Actuation, Governor, GovernorReport
 from repro.core.policies import COUNTDOWN_SLACK, Policy
 from repro.core.pstate import DEFAULT_HW, HwModel
 from repro.core.simulator import SimResult, Workload, simulate
-from repro.core.timeout import ThetaDecision, ThetaTuner
+from repro.core.timeout import PredictorDecision, ThetaDecision, ThetaTuner
 
-TRACE_VERSION = 2
-SUPPORTED_VERSIONS = (1, 2)
+TRACE_VERSION = 3
+SUPPORTED_VERSIONS = (1, 2, 3)
 
 
 class TraceRecorder:
@@ -90,6 +95,13 @@ class TraceRecorder:
                       "rank": int(dec.rank), "before": float(dec.theta_before),
                       "after": float(dec.theta_after), "reason": dec.reason,
                       "obs": float(dec.slack)})
+
+    def on_predictor(self, dec: PredictorDecision) -> None:
+        self._append({"k": "pred", "t": float(dec.t), "site": int(dec.site),
+                      "rank": int(dec.rank), "kind": dec.kind,
+                      "predicted": float(dec.predicted),
+                      "observed": float(dec.observed),
+                      "cost": float(dec.cost), "source": dec.source})
 
     def _append(self, rec: Dict) -> None:
         self.n_seen += 1
@@ -153,11 +165,13 @@ def replay(
 
     With the same policy/hw as the live run this reproduces its report
     exactly; with a different policy/theta it is the cheapest what-if.
-    ``act`` and ``theta`` records are outputs of the live governor and are
-    skipped — the replayed governor re-derives its own (a fresh tuner is a
-    pure function of the observation order, so an adaptive run replayed
-    under the same adaptive policy reproduces the recorded decisions
-    bit-for-bit; pass ``tuner`` to replay under different tuner settings —
+    ``act``, ``theta`` and ``pred`` records are outputs of the live
+    governor and are skipped — the replayed governor re-derives its own (a
+    fresh tuner — predictive included: seeded, counter-triggered refits —
+    is a pure function of the observation order, so an adaptive or
+    predictive run replayed under the same policy reproduces the recorded
+    decisions bit-for-bit; pass ``tuner`` to replay under different tuner
+    settings —
     mutually exclusive with ``governor``, which carries its own).
     """
     if governor is not None and tuner is not None:

@@ -56,7 +56,8 @@ import numpy as np
 from repro.core.events import PHASE_NAMES, EventBatch, PhaseRecord
 from repro.core.policies import COUNTDOWN_SLACK, Policy
 from repro.core.pstate import DEFAULT_HW, HwModel
-from repro.core.timeout import ThetaDecision, ThetaTuner
+from repro.core.timeout import (PredictiveTuner, PredictorDecision,
+                                ThetaDecision, ThetaTuner)
 from repro.dist.straggler import StragglerDetector
 
 
@@ -81,7 +82,7 @@ class CallRecord:
     """
 
     __slots__ = ("call_id", "enter", "slack_end", "copy_end", "dispatch",
-                 "theta_used", "site", "observed")
+                 "theta_used", "site", "observed", "prearm")
 
     def __init__(self, call_id: int, site: Optional[int] = None):
         self.call_id = call_id
@@ -92,6 +93,9 @@ class CallRecord:
         self.theta_used: Dict[int, float] = {}  # raw theta armed per rank at
         # slack end (only populated under a tuner; fixed policies price the
         # constant default, saving a dict store per event)
+        self.prearm: Optional[Dict[int, float]] = None  # rank -> the reactive
+        # threshold displaced by a predictive pre-arm (lazy: only predictive
+        # tuners pay the dict; the copy close reads it for guard attribution)
         self.site = site                        # tuner histogram key override
         self.observed = 0                       # arrival count already fed to
         # the straggler detector (a mid-run finalize() observes the record
@@ -399,12 +403,23 @@ class Governor:
         self._rec_phase = getattr(recorder, "on_phase", None)
         self._rec_act = getattr(recorder, "on_actuation", None)
         self._rec_theta = getattr(recorder, "on_theta", None)
+        self._rec_pred = getattr(recorder, "on_predictor", None)
         self._rec_pair = getattr(recorder, "on_actuation_pair", None)
         self._rec_retire = getattr(recorder, "on_retired", None)
         self._rec_retire_batch = getattr(recorder, "on_retired_batch", None)
         if tuner is None and policy.theta_mode == "adaptive":
             tuner = ThetaTuner(hw=hw, theta0=policy.theta)
+        elif tuner is None and policy.theta_mode in ("predictive", "predict_only"):
+            # predict_only is the paper's strawman: pre-arm on ANY
+            # predicted slack, no reactive fallback, no guard
+            # (PredictiveTuner zeroes the arm bar for that configuration) —
+            # the misprediction cost it incurs is the point
+            hyb = policy.theta_mode == "predictive"
+            tuner = PredictiveTuner(
+                hw=hw, theta0=policy.theta, reactive=hyb, guarded=hyb,
+            )
         self.tuner = tuner
+        self._predictive = isinstance(tuner, PredictiveTuner)
         self.retention = int(retention)
         # call_ids are assigned at TRACE time, so the same id recurs on every
         # executed step: rotate to a fresh occurrence when a rank re-enters,
@@ -435,6 +450,11 @@ class Governor:
         )
         self._n_theta = 0
         self._theta_log = (
+            collections.deque(maxlen=log_retention) if log_retention is not None
+            else []
+        )
+        self._n_pred = 0
+        self._pred_log = (
             collections.deque(maxlen=log_retention) if log_retention is not None
             else []
         )
@@ -522,9 +542,29 @@ class Governor:
         log = self._theta_log
         return log if type(log) is list else list(log)
 
+    def _record_pred(self, dec: PredictorDecision) -> None:
+        self._n_pred += 1
+        self._pred_log.append(dec)
+        if self._rec_pred is not None:
+            self._rec_pred(dec)
+
+    @property
+    def n_predictor_decisions(self) -> int:
+        """Predictor-path records booked so far (pre-arms, mispredictions,
+        guard trips) — survives ``log_retention`` eviction."""
+        return self._n_pred
+
+    @property
+    def predictor_log(self) -> List[PredictorDecision]:
+        """Predictor decisions booked so far — always a ``list``, mirroring
+        :attr:`theta_log`."""
+        log = self._pred_log
+        return log if type(log) is list else list(log)
+
     def _close_slack(self, rec: CallRecord, rank: int, t: float) -> None:
         """Shared barrier_exit tail: price the slack against the (possibly
-        tuned) threshold, book the actuation pair, feed the tuner."""
+        tuned or pre-armed) threshold, book the actuation pair, feed the
+        tuner (and, under a predictive tuner, the guard + predictor)."""
         rec.slack_end[rank] = t
         t0 = rec.enter.get(rank, t)
         slack = t - t0
@@ -533,12 +573,31 @@ class Governor:
         else:
             key = rec.site if rec.site is not None else rec.call_id
             theta = self.tuner.theta_for(key)   # threshold armed BEFORE this obs
+            armed = False
+            pred = float("nan")
+            src = ""
+            if self._predictive:
+                # the pre-arm decision is causal: it consults predictor +
+                # guard state from strictly before this occurrence
+                armed, pred, src = self.tuner.decide(key, rank)
+                if armed:
+                    if rec.prearm is None:
+                        rec.prearm = {}
+                    rec.prearm[rank] = theta    # displaced reactive threshold
+                    theta = 0.0                 # downshift issued at entry:
+                    # only the PCU commit quantization (theta_eff(0)) gates it
+                elif not self.tuner.reactive:
+                    theta = float("inf")        # prediction-only: no fallback
             rec.theta_used[rank] = theta
             last = self._last_end.get(rank)
             comp = max(t0 - last, 0.0) if last is not None else 0.0
             self._record_theta(
                 self.tuner.observe_slack(key, slack, t, rank=rank, comp=comp)
             )
+            if self._predictive:
+                for pdec in self.tuner.account_outcome(
+                        key, rank, t, pred, slack, armed, src, comp=comp):
+                    self._record_pred(pdec)
         self._last_end[rank] = t
         if slack >= theta and self._timeout_armed:
             self._actuate(t, rank, rec.call_id, slack)
@@ -552,6 +611,15 @@ class Governor:
         slack = t1 - rec.enter.get(rank, t1)
         downshifted = slack >= rec.theta_used.get(rank, self._theta_default)
         key = rec.site if rec.site is not None else rec.call_id
+        if self._predictive:
+            if rec.prearm is not None:
+                reactive_theta = rec.prearm.get(rank)
+                if reactive_theta is not None and slack < reactive_theta:
+                    # this downshift exists only because of the pre-arm — its
+                    # copy stretch is misprediction cost, booked to the guard
+                    for pdec in self.tuner.guard_copy(key, t - t1, t, rank=rank):
+                        self._record_pred(pdec)
+            self.tuner.predictor.note_copy(key, rank, t - t1)
         self._record_theta(
             self.tuner.observe_copy(key, t - t1, t, rank=rank, downshifted=downshifted)
         )
@@ -1509,6 +1577,8 @@ class Governor:
             self._act_log.clear()
             self._n_theta = 0
             self._theta_log.clear()
+            self._n_pred = 0
+            self._pred_log.clear()
             self.detector.reset()
             if self.tuner is not None:
                 self.tuner.reset()

@@ -21,6 +21,18 @@ Each policy is a declarative config consumed by the vectorized engine in
                   ThetaTuner (repro.core.timeout): per-site slack-CDF decay
                   bounded by the 1% overhead budget, AIMD raise on observed
                   copy slowdown, clamped to [switch_latency/2, theta_max].
+  cntd_predictive — cntd_adaptive plus the online duration predictor
+                  (repro.core.predictor.OnlinePredictor): when predicted
+                  slack clears the residue-cost bar the downshift is
+                  pre-armed at comm entry (no theta wait), wrapped in a
+                  per-site misprediction guard that falls back to the pure
+                  tuner path when realized cost exceeds the 1% budget.
+  cntd_predict_only — the paper's prediction-only strawman (Guermouche /
+                  Fermata-style): pre-arms on ANY predicted slack and slows
+                  the WHOLE comm (slack+copy, no artificial barrier), with
+                  NO reactive timeout fallback and NO guard — the
+                  configuration whose misprediction + copy-slowdown cost
+                  the Table-3 bench shows overshooting the overhead budget.
 """
 from __future__ import annotations
 
@@ -37,6 +49,8 @@ class Policy:
     uses_hash: bool = False         # per-call stack-hash + lookup cost
     uses_barrier: bool = False      # artificial barrier inserted (cost + isolation)
     theta_mode: str = "fixed"       # fixed | adaptive (online ThetaTuner)
+    #                               | predictive (guarded hybrid PredictiveTuner)
+    #                               | predict_only (unguarded, no timeout fallback)
 
 
 BASELINE = Policy("baseline")
@@ -66,27 +80,43 @@ CNTD_ADAPTIVE = Policy(
     "cntd_adaptive", comm_mode="timeout", comm_scope="slack",
     theta=500e-6, uses_barrier=True, theta_mode="adaptive",
 )
+CNTD_PREDICTIVE = Policy(
+    "cntd_predictive", comm_mode="timeout", comm_scope="slack",
+    theta=500e-6, uses_barrier=True, theta_mode="predictive",
+)
+CNTD_PREDICT_ONLY = Policy(
+    "cntd_predict_only", comm_mode="timeout", comm_scope="comm",
+    theta=500e-6, uses_barrier=False, theta_mode="predict_only",
+)
 
 # the 8 fixed-theta policies the paper evaluates — frozen by the golden
-# conformance suite (tests/test_golden.py); cntd_adaptive rides on top
+# conformance suite (tests/test_golden.py); cntd_adaptive and the
+# predictive pair ride on top (cntd_predictive has its own fixture file)
 FIXED_POLICIES = [
     BASELINE, MINFREQ, FERMATA_100MS, FERMATA_500US,
     ANDANTE, ADAGIO, COUNTDOWN, COUNTDOWN_SLACK,
 ]
 
-ALL_POLICIES = {p.name: p for p in FIXED_POLICIES + [CNTD_ADAPTIVE]}
+ALL_POLICIES = {
+    p.name: p
+    for p in FIXED_POLICIES + [CNTD_ADAPTIVE, CNTD_PREDICTIVE, CNTD_PREDICT_ONLY]
+}
 
 
 def policy_for_theta(theta: str, base: Policy = COUNTDOWN_SLACK) -> Policy:
     """Resolve a CLI ``--theta`` value against ``base``: ``""`` keeps it
     untouched, ``"auto"`` switches it to adaptive mode (the governor
     attaches an online :class:`~repro.core.timeout.ThetaTuner`; the base's
-    scope/costs/theta0 are honored), anything else parses as a fixed
-    timeout in seconds."""
+    scope/costs/theta0 are honored), ``"predictive"`` to the guarded
+    predictor+timeout hybrid (a
+    :class:`~repro.core.timeout.PredictiveTuner`), anything else parses as
+    a fixed timeout in seconds."""
     if not theta:
         return base
     from dataclasses import replace
 
     if theta == "auto":
         return replace(base, theta_mode="adaptive", name="cntd_adaptive")
+    if theta == "predictive":
+        return replace(base, theta_mode="predictive", name="cntd_predictive")
     return replace(base, theta=float(theta))

@@ -78,9 +78,25 @@ class SimResult:
     theta_series: Optional[np.ndarray] = None       # (T,) theta_eff armed per task
     theta_bins: Optional[np.ndarray] = None         # (n_bins,) theta_eff active
                                                     # per power_dt bin
+    n_prearm: int = 0                               # predictive pre-arms issued
+    n_mispredict: int = 0                           # ... whose slack fell short
+    n_guard_trips: int = 0                          # sites tripped to pure tuner
+    t_dvfs_stretch: float = 0.0                     # per-rank-summed seconds of
+    # busy-phase stretch induced by DVFS actions (pinned residue bleeding
+    # into compute/copy, and comm-scope copies run below f_run) — the cost
+    # the runtime's rho budget bounds against busy time
 
     def overhead_vs(self, base: "SimResult") -> float:
         return 100.0 * (self.time / base.time - 1.0)
+
+    def dvfs_cost_pct(self) -> float:
+        """DVFS-induced busy-time cost, percent — the quantity the paper's
+        1% budget (``rho``) actually constrains: per-rank stretch seconds
+        from downshift residue over per-rank busy seconds.  Unlike
+        :meth:`overhead_vs`, barrier absorption cannot hide it — a rank's
+        stretch counts even when another rank's wait swallows it."""
+        busy = self.tcomp + self.tslack + self.tcopy
+        return 100.0 * self.t_dvfs_stretch / busy if busy > 0 else 0.0
 
     def energy_saving_vs(self, base: "SimResult") -> float:
         return 100.0 * (1.0 - self.energy / base.energy)
@@ -101,6 +117,8 @@ class TraceRecord:
     comp: np.ndarray            # (T, N) realized durations at f_max
     slack: np.ndarray           # (T, N)
     copy: np.ndarray            # (T, N)
+    partner: Optional[np.ndarray] = None    # (T, N) p2p pair partner — feeds
+    # the locality feature (node distance of the pair) in predictor.py
 
 
 def _phase(hw: HwModel, work, beta, f, ell, activity):
@@ -227,12 +245,27 @@ def simulate(
     energy = np.zeros(n)
     tcomp = tslack = tcopy = 0.0
     exploited = exploited_slack = toverlap = 0.0
+    t_stretch = 0.0              # DVFS-induced busy stretch (rho's denominator
+    #                              is busy time; barriers cannot absorb this)
 
     tuner = None
+    hybrid = None                # PredictiveTuner view of tuner, when predictive
     if pol.theta_mode == "adaptive" and pol.comm_mode == "timeout":
         from repro.core.timeout import ThetaTuner   # deferred: keeps import light
 
         tuner = ThetaTuner(hw=hw, theta0=pol.theta)
+    elif pol.theta_mode in ("predictive", "predict_only") and pol.comm_mode == "timeout":
+        from repro.core.timeout import PredictiveTuner
+
+        # predict_only is the paper's prediction-only strawman: pre-arm on
+        # ANY predicted slack, with no reactive fallback, no guard, and no
+        # arm bar (PredictiveTuner zeroes the bar for that configuration)
+        _hyb = pol.theta_mode == "predictive"
+        tuner = hybrid = PredictiveTuner(
+            hw=hw, theta0=pol.theta, reactive=_hyb, guarded=_hyb,
+        )
+    arm_eff = hw.theta_eff(0.0)  # a pre-armed downshift waits only for the
+    # PCU commit quantization, not for any timer
     theta_series = np.full(t_tasks, np.nan)
     t_arm = np.zeros(t_tasks)                           # theta arm time per task
 
@@ -296,6 +329,8 @@ def simulate(
         f_comp = np.minimum(f_comp, f_run)              # external cap clamp
 
         d_comp, e_comp, ell = _phase(hw, work, wl.beta_comp, f_comp, ell, hw.act_comp)
+        # residue-free counterfactual is closed-form: work at f_comp
+        t_stretch += float(np.sum(d_comp - work * hw.slowdown(f_comp, wl.beta_comp)))
         energy += e_comp
         tcomp += float(d_comp.sum())
         if power_dt:
@@ -351,13 +386,25 @@ def simulate(
         t_arm[k] = float(arrival.min())
 
         # ---- slack trajectory ----
+        preds = prearm = None
         if pol.comm_mode == "pin_min":                  # minfreq: already low
             armed = np.zeros(n, dtype=bool)
             t_hi = np.zeros(n)
             f_slack_hi = np.full(n, fmin)
         elif pol.comm_mode == "timeout":
             armed = np.ones(n, dtype=bool)
-            t_hi = np.minimum(window, theta_eff)
+            if hybrid is not None:
+                # pre-arm decision BEFORE this task's slack is observed
+                # (same causality as the live governor's decide())
+                preds, pred_src = hybrid.predict_ranks(site, n)
+                prearm = hybrid.arm_mask(site, preds)
+                hi_armed = np.minimum(window, arm_eff)
+                if hybrid.reactive:                     # hybrid: timeout fallback
+                    t_hi = np.where(prearm, hi_armed, np.minimum(window, theta_eff))
+                else:                                   # prediction-only strawman
+                    t_hi = np.where(prearm, hi_armed, window)
+            else:
+                t_hi = np.minimum(window, theta_eff)
             f_slack_hi = f_comp
         elif pol.comm_mode == "predict_timeout":        # fermata
             armed = np.nan_to_num(last_comm[site], nan=0.0) >= 2.0 * theta_k
@@ -368,6 +415,19 @@ def simulate(
             t_hi = window
             f_slack_hi = f_comp
         t_lo = window - t_hi
+        fired = t_lo > 0            # downshift engaged within the window
+        # PCU serialization: the restore issued at slack end completes one
+        # switch latency after the in-flight down leg commits, pinning the
+        # next phase for max(lat, 2*lat - window).  Timer paths always have
+        # window >= theta_eff >= lat when they fire (the down leg committed
+        # long before the restore), which leaves the residue at lat — only
+        # pre-armed short slacks pay the early-restore penalty
+        resid = np.maximum(lat, 2.0 * lat - window)
+        if prearm is not None:
+            # a pre-armed rank issues the P-state command at comm entry
+            # even if the slack ends mid-transition — the residue applies
+            # regardless of whether t_lo ever opened
+            fired = fired | prearm
         if ov is not None and not overlap_aware:
             # unaware contrast: the window's head is busy overlap, not idle.
             # The timer cannot tell: past theta_eff it pins the core WHILE
@@ -414,6 +474,12 @@ def simulate(
             comp_obs = d_comp + ov if (ov is not None and overlap_aware) else d_comp
             tuner.observe_slack_batch(site, window, t=float(t_bar.max()),
                                       comp=comp_obs)
+            if hybrid is not None and prearm is not None:
+                # guard bookings (c_down per mispredicted pre-arm) + the
+                # predictor's training rows for this task
+                hybrid.account_outcome_batch(site, preds, window, prearm,
+                                             t=float(t_bar.max()),
+                                             source=pred_src, comp=comp_obs)
 
         # ---- copy phase ----
         wc = float(wl.copy[k])
@@ -429,7 +495,17 @@ def simulate(
             elif pol.comm_mode in ("timeout", "predict_timeout") and pol.comm_scope == "comm":
                 # timer keeps running inside the MPI call: after theta_eff
                 # total in-call time, frequency drops; copy may start below it
-                t_to_fire = np.where(armed, np.maximum(theta_eff - window, 0.0), np.inf)
+                if prearm is not None:
+                    # pre-armed ranks committed the downshift at entry
+                    # (effective after the arm quantization); the rest
+                    # follow the reactive timer, or never fire for the
+                    # prediction-only strawman
+                    fallback = theta_eff if hybrid.reactive else np.inf
+                    t_to_fire = np.maximum(
+                        np.where(prearm, arm_eff, fallback) - window, 0.0
+                    )
+                else:
+                    t_to_fire = np.where(armed, np.maximum(theta_eff - window, 0.0), np.inf)
                 d_copy, e_copy, t_min_in_copy = _two_rate_phase(
                     hw, wc_r, wl.beta_copy, t_to_fire, f_run, hw.act_copy
                 )
@@ -438,14 +514,17 @@ def simulate(
             else:
                 # slack scope: frequency restored at barrier exit; commit
                 # latency pins the start of the copy at f_min
-                ell = np.where(t_lo > 0, lat, ell)
+                ell = np.where(fired, resid, ell)
                 d_copy, e_copy, ell = _phase(
                     hw, wc_r, wl.beta_copy, np.full(n, f_run),
                     ell, hw.act_copy,
                 )
-                t_min_in_copy = np.minimum(d_copy, np.where(t_lo > 0, lat, 0.0))
+                t_min_in_copy = np.minimum(d_copy, np.where(fired, resid, 0.0))
             energy += e_copy
             tcopy += float(d_copy.sum())
+            # any copy time beyond the full-speed copy is DVFS-induced
+            # (residue bleed in slack scope, deliberate in comm scope)
+            t_stretch += float(np.sum(d_copy - wc_r * hw.slowdown(f_run, wl.beta_copy)))
             if power_dt:
                 segs.append((t_bar, d_copy, e_copy))
             exploited += float(np.sum(t_min_in_copy))
@@ -466,10 +545,23 @@ def simulate(
                     ))
                 tuner.observe_copy_slowdown(site, float(d_copy.sum()), extra,
                                             frac, t=float(t.max()))
+                if hybrid is not None:
+                    hybrid.predictor.note_copy_ranks(site, d_copy)
+                    if prearm is not None and prearm.any():
+                        # stretch on ranks ONLY the pre-arm downshifted
+                        # (reactive theta would not have fired) is
+                        # misprediction cost — book it to the guard
+                        mis = prearm & (window < theta_eff)
+                        if mis.any():
+                            extras = d_copy[mis] - base_copy[mis]
+                            fracs = (d_copy[mis]
+                                     / np.maximum(base_copy[mis], 1e-30) - 1.0)
+                            hybrid.guard_copy_batch(site, extras, fracs,
+                                                    t=float(t.max()))
         else:
             # pure synchronization primitive: restore pins next compute
             if pol.comm_scope == "slack" or pol.comm_mode in ("timeout", "predict_timeout"):
-                ell = np.where(t_lo > 0, lat, ell)
+                ell = np.where(fired, resid, ell)
             t = t_bar + penalty
             if power_dt and e_pen is not None:
                 segs.append((t_bar, penalty, e_pen))
@@ -540,6 +632,12 @@ def simulate(
                       0, t_tasks - 1)
         theta_bins = theta_series[idx]
 
+    n_prearm = n_mispredict = n_trips = 0
+    if hybrid is not None:
+        for g in hybrid.guard_summary().values():
+            n_prearm += int(g["n_armed"])
+            n_mispredict += int(g["n_mispredict"])
+            n_trips += int(g["tripped"])
     res = SimResult(
         name=pol.name,
         time=float(t.max()),
@@ -555,9 +653,14 @@ def simulate(
         toverlap=toverlap,
         theta_series=theta_series if has_theta else None,
         theta_bins=theta_bins,
+        n_prearm=n_prearm,
+        n_mispredict=n_mispredict,
+        n_guard_trips=n_trips,
+        t_dvfs_stretch=t_stretch,
     )
     trace = (
-        TraceRecord(wl.site, wl.is_p2p, wl.nbytes, trace_comp, trace_slack, trace_copy)
+        TraceRecord(wl.site, wl.is_p2p, wl.nbytes, trace_comp, trace_slack,
+                    trace_copy, partner=wl.partner)
         if collect_trace
         else None
     )

@@ -382,10 +382,11 @@ def main() -> None:
     ap.add_argument("--tpot-target", type=float, default=0.0,
                     help="TPOT SLO target (s); 0 disables throttling")
     ap.add_argument("--theta", default="",
-                    help="governor timeout (continuous mode only): seconds, or "
+                    help="governor timeout (continuous mode only): seconds, "
                          "'auto' for the online ThetaTuner (decode underfill/"
-                         "idle feed its per-site histograms); empty = the "
-                         "policy default")
+                         "idle feed its per-site histograms), or 'predictive' "
+                         "for the guarded predictor+timeout hybrid "
+                         "(cntd_predictive); empty = the policy default")
     ap.add_argument("--trace-out", default="",
                     help="record the governor's event stream to this JSONL file "
                          "(continuous mode; replayable via repro.cluster.trace)")

@@ -121,9 +121,12 @@ def main() -> None:
                          "cannot emit them); implies --instrument profile and "
                          "data parallelism only")
     ap.add_argument("--theta", default="",
-                    help="governor timeout: seconds (e.g. 500e-6), or 'auto' for "
-                         "the online ThetaTuner (cntd_adaptive policy); empty = "
-                         "the policy default (500 us fixed)")
+                    help="governor timeout: seconds (e.g. 500e-6), 'auto' for "
+                         "the online ThetaTuner (cntd_adaptive policy), or "
+                         "'predictive' for the guarded predictor+timeout "
+                         "hybrid (cntd_predictive: pre-arms the downshift "
+                         "when predicted slack clears the residue-cost bar); "
+                         "empty = the policy default (500 us fixed)")
     ap.add_argument("--trace-out", default="",
                     help="record the governor's event stream to this JSONL file "
                          "(replayable via repro.cluster.trace; implies --instrument profile)")

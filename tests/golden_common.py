@@ -25,6 +25,11 @@ from repro.core.policies import FIXED_POLICIES, Policy
 
 CANNED = ("balanced", "straggler", "bursty")
 GOLDEN_POLICY_NAMES = [p.name for p in FIXED_POLICIES]
+# the predictive pair is pinned by its own fixture file
+# (tests/goldens/predictive.json): the frozen GovernorReport stays
+# byte-compatible with the fixed-policy goldens, and the predictor-path
+# decision count rides alongside so silent pre-arm/guard drift fails too
+PREDICTIVE_POLICY_NAMES = ["cntd_predictive", "cntd_predict_only"]
 
 
 def _feed_balanced(gov: Governor) -> None:
@@ -103,3 +108,14 @@ def report_dict(policy: Policy, kind: str) -> dict:
     gov = Governor(policy=policy)
     feed(gov, kind)
     return gov.finalize().to_dict()
+
+
+def predictive_entry(policy: Policy, kind: str) -> dict:
+    """The predictive fixture's frozen quantity: the report plus the
+    predictor-path decision count (pre-arms, mispredictions, guard trips) —
+    the report alone would miss a predictor that silently stopped arming."""
+    gov = Governor(policy=policy)
+    feed(gov, kind)
+    rep = gov.finalize().to_dict()
+    return {"report": rep,
+            "n_predictor_decisions": int(gov.n_predictor_decisions)}

@@ -148,7 +148,7 @@ def test_adaptive_trace_replay_is_bitwise_exact():
     with tempfile.TemporaryDirectory() as d:
         path = rec.save(os.path.join(d, "adaptive.jsonl"))
         header, records = load(path)
-    assert header["version"] == TRACE_VERSION == 2
+    assert header["version"] == TRACE_VERSION == 3
 
     replayed_gov, rep = replay(records, policy=CNTD_ADAPTIVE)
     for f in ("total_slack", "total_copy", "total_overlap", "exploited_slack",

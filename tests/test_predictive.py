@@ -1,0 +1,265 @@
+"""The cntd_predictive hybrid: golden conformance, replay differential,
+guard semantics.
+
+Three layers, mirroring the tentpole's claims:
+
+* **Golden conformance** — the predictive pair (hybrid + prediction-only
+  strawman) on the 3 canned streams is frozen in its own fixture file
+  (``tests/goldens/predictive.json``), so predictor/guard drift fails
+  loudly without touching the fixed-policy goldens.
+* **Replay differential** — a live predictive run on a recurring-site
+  stream (pre-arms, mispredictions, AND a guard trip) saved as a v3 trace
+  and replayed through a fresh governor re-derives the report, the
+  actuation stream, every theta decision and every predictor decision
+  bit-for-bit: the hybrid (tuner + guard + seeded, counter-triggered
+  forest refits) is a pure function of the observation order.
+* **Guard semantics** — a tripped site's tuner decisions are identical to
+  a plain :class:`ThetaTuner`'s (property-tested over random streams), the
+  budget and EV gates fire where constructed to, and the strawman
+  configuration really has no bar.
+"""
+import json
+import math
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from golden_common import CANNED, PREDICTIVE_POLICY_NAMES, predictive_entry
+from repro.core.governor import Governor
+from repro.core.policies import ALL_POLICIES, CNTD_PREDICTIVE
+from repro.core.pstate import DEFAULT_HW
+from repro.core.timeout import PredictiveTuner, ThetaTuner
+from test_golden import GOLDEN_DIR, _assert_close
+
+
+def _load_fixture() -> dict:
+    with open(os.path.join(GOLDEN_DIR, "predictive.json")) as f:
+        return json.load(f)
+
+
+# --------------------------------------------------------------------------
+# golden conformance (satellite: fixtures for the predictive pair)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy_name", PREDICTIVE_POLICY_NAMES)
+@pytest.mark.parametrize("kind", CANNED)
+def test_predictive_report_matches_golden(kind, policy_name):
+    fixture = _load_fixture()["policies"][policy_name][kind]
+    live = json.loads(json.dumps(
+        predictive_entry(ALL_POLICIES[policy_name], kind)))
+    _assert_close(live, fixture, path=f"predictive/{kind}/{policy_name}")
+
+
+def test_predictive_fixture_covers_both_policies():
+    fixture = _load_fixture()
+    assert sorted(fixture["policies"]) == sorted(PREDICTIVE_POLICY_NAMES)
+    for name, streams in fixture["policies"].items():
+        assert sorted(streams) == sorted(CANNED), name
+    # the bursty stream's stable ingested site accrues history, so the
+    # predictor path must actually fire somewhere in the frozen fixture
+    assert any(
+        e["n_predictor_decisions"] > 0
+        for streams in fixture["policies"].values() for e in streams.values()
+    )
+
+
+# --------------------------------------------------------------------------
+# replay differential (satellite: pre-arms + guard trips re-derive exactly)
+# --------------------------------------------------------------------------
+
+def _feed_recurring(gov: Governor, n_iters: int = 60) -> None:
+    """Recurring call sites (ids recur across iterations — the rotation
+    rule), built to drive every predictor path:
+
+    * site 0 — ranks 0..2 always see ~3 ms slack (the EMA, then the
+      forest, clears the bar: correct pre-arms), rank 3 is critical.
+    * site 1 — slack alternates ~2 ms / ~50 us per iteration: the EMA
+      settles ~1 ms (over the bar), so odd iterations mispredict below
+      break-even and the guard books serialization residue until the
+      site trips.
+    """
+    t = 1.0
+    for it in range(n_iters):
+        for site, lag in ((0, 3e-3), (1, 2e-3 if it % 2 == 0 else 50e-6)):
+            arrivals = np.full(4, t)
+            arrivals[3] += lag                   # rank 3 is always critical
+            release = float(arrivals.max())
+            for r in range(4):
+                gov.sink(r, "barrier_enter", site, float(arrivals[r]))
+            for r in range(4):
+                gov.sink(r, "barrier_exit", site, release)
+                gov.sink(r, "copy_exit", site, release + 0.6e-3)
+            t = release + 5e-3
+
+
+def test_predictive_replay_is_bitwise_exact():
+    from repro.cluster.trace import TRACE_VERSION, TraceRecorder, load, replay
+
+    rec = TraceRecorder(meta={"run": "predictive"})
+    gov = Governor(policy=CNTD_PREDICTIVE, recorder=rec)
+    _feed_recurring(gov)
+    live = gov.finalize()
+    kinds = {d.kind for d in gov.predictor_log}
+    assert {"prearm", "mispredict", "trip"} <= kinds, kinds
+    assert live.n_theta_decisions > 0
+
+    with tempfile.TemporaryDirectory() as d:
+        path = rec.save(os.path.join(d, "predictive.jsonl"))
+        header, records = load(path)
+    assert header["version"] == TRACE_VERSION == 3
+    recorded_pred = [r for r in records if r["k"] == "pred"]
+    assert len(recorded_pred) == len(gov.predictor_log)
+
+    replayed_gov, rep = replay(records, policy=CNTD_PREDICTIVE)
+    for f in ("total_slack", "total_copy", "exploited_slack",
+              "energy_baseline", "energy_policy", "n_calls", "n_downshifts",
+              "n_theta_decisions"):
+        assert getattr(rep, f) == getattr(live, f), f
+    assert replayed_gov.actuation_log == gov.actuation_log
+    assert replayed_gov.theta_log == gov.theta_log
+    # the re-derived predictor decisions match the recorded ones field by
+    # field — pre-arms, guard bookings, and the trip, in order
+    assert replayed_gov.predictor_log == gov.predictor_log
+    for r, dec in zip(recorded_pred, replayed_gov.predictor_log):
+        assert (r["site"], r["rank"], r["kind"], r["source"]) == (
+            dec.site, dec.rank, dec.kind, dec.source)
+        for key, got in (("t", dec.t), ("predicted", dec.predicted),
+                         ("observed", dec.observed), ("cost", dec.cost)):
+            if math.isnan(r[key]) if isinstance(r[key], float) else False:
+                assert math.isnan(got)
+            else:
+                assert r[key] == got, (key, r)
+
+
+def test_predictive_governor_trips_site_and_keeps_reactive_path():
+    """The guard trips the alternating site but leaves the stable one armed;
+    after the trip, downshifts still happen there (the reactive fallback)."""
+    gov = Governor(policy=CNTD_PREDICTIVE)
+    _feed_recurring(gov)
+    rep = gov.finalize()
+    guards = gov.tuner.guard_summary()
+    assert guards[1]["tripped"] and not guards[0]["tripped"]
+    assert guards[0]["n_mispredict"] == 0     # stable site never mispredicts
+    assert guards[1]["n_mispredict"] > 0
+    assert rep.n_downshifts > 0
+
+
+# --------------------------------------------------------------------------
+# guard semantics (satellite: tripped site == pure ThetaTuner, gates fire)
+# --------------------------------------------------------------------------
+
+slack_streams = st.integers(min_value=0, max_value=10_000).map(
+    lambda seed: np.random.default_rng(seed).exponential(1e-3, 40))
+
+
+@settings(max_examples=25, deadline=None)
+@given(slack_streams)
+def test_tripped_site_decisions_equal_pure_theta_tuner(slacks):
+    """Property: once a site trips, the hybrid's theta evolution, decision
+    records, and copy feedback are indistinguishable from a plain
+    ThetaTuner fed the identical observation order — and it never arms."""
+    hyb = PredictiveTuner()
+    pure = ThetaTuner()
+    site = 5
+    hyb.trip_site(site)
+    t = 0.0
+    for i, s in enumerate(np.asarray(slacks, np.float64).tolist()):
+        armed, _, src = hyb.decide(site, rank=i % 4)
+        assert not armed and src == "tripped"
+        assert not hyb.arm_mask(site, np.full(4, 1.0)).any()
+        d_h = hyb.observe_slack(site, s, t=t, rank=i % 4, comp=3 * s)
+        d_p = pure.observe_slack(site, s, t=t, rank=i % 4, comp=3 * s)
+        assert d_h == d_p
+        assert hyb.theta_for(site) == pure.theta_for(site)
+        d_h = hyb.observe_copy(site, 0.8e-3 + s, t=t, downshifted=i % 3 == 0)
+        d_p = pure.observe_copy(site, 0.8e-3 + s, t=t, downshifted=i % 3 == 0)
+        assert d_h == d_p
+        t += 10e-3
+    assert hyb.decisions == pure.decisions
+
+
+def test_guard_budget_gate_trips_and_is_permanent():
+    hw = DEFAULT_HW
+    tun = PredictiveTuner(hw=hw)
+    site = 0
+    # a little busy time so the 1% budget is tiny but nonzero
+    tun.observe_slack_batch(site, np.full(4, 1e-3), t=0.0)
+    preds = np.full(4, 1.0)                     # confidently wrong
+    armed = tun.arm_mask(site, preds)
+    assert armed.all()
+    decs = tun.account_outcome_batch(site, preds, np.zeros(4), armed,
+                                     t=1.0, source="ema")
+    trips = [d for d in decs if d.kind == "trip"]
+    assert len(trips) == 1 and trips[0].source == "budget"
+    assert tun.tripped(site)
+    assert not tun.arm_mask(site, preds).any()          # permanent
+    armed2, pred2, src2 = tun.decide(site, 0)
+    assert (armed2, src2) == (False, "tripped") and math.isnan(pred2)
+
+
+def test_guard_ev_gate_trips_marginal_site():
+    """A site whose pre-arms are all correct-but-marginal (tiny gain) and
+    occasionally mispredict trips on the EV gate once cost > gain, even
+    while the 1% budget (huge busy) never binds."""
+    tun = PredictiveTuner(ev_min_armed=8)
+    site = 3
+    t = 0.0
+    # enormous busy time: the budget gate can never fire
+    tun.observe_slack_batch(site, np.full(4, 0.3), t=t, comp=np.full(4, 10.0))
+    arm_eff = tun.hw.theta_eff(0.0)
+    gate = None
+    for i in range(40):
+        preds = np.full(4, 1e-3)
+        armed = tun.arm_mask(site, preds)
+        if not armed.any():
+            break
+        # slack just above break-even: gain ~0; every 3rd round mispredicts
+        s = 0.0 if i % 3 == 2 else arm_eff * 1.01
+        decs = tun.account_outcome_batch(site, preds, np.full(4, s), armed,
+                                         t=t, source="forest")
+        trips = [d for d in decs if d.kind == "trip"]
+        if trips:
+            gate = trips[0].source
+            break
+        t += 1e-2
+    assert tun.tripped(site) and gate == "ev"
+
+
+def test_strawman_has_no_bar_and_no_guard():
+    straw = PredictiveTuner(reactive=False, guarded=False)
+    assert straw.arm_bar == 0.0
+    # arms on ANY predicted slack, and never trips no matter the cost
+    assert straw.arm_mask(0, np.array([1e-9, 5e-4])).all()
+    for _ in range(50):
+        straw.account_outcome_batch(0, np.full(2, 1.0), np.zeros(2),
+                                    np.ones(2, bool), t=0.0, source="ema")
+    assert not straw.tripped(0)
+    assert straw.arm_mask(0, np.array([1e-9])).all()
+    hybrid = PredictiveTuner()
+    assert hybrid.arm_bar > hybrid.hw.theta_eff(0.0)
+
+
+def test_simulator_predictive_counters_flow_to_simresult():
+    """The vectorized engine surfaces pre-arm/mispredict/trip counts on
+    SimResult, and the hybrid's overhead stays in the same regime as the
+    adaptive baseline on a small stream (the guard's whole point)."""
+    import dataclasses
+
+    from repro.cluster.coschedule import MIX_SPECS
+    from repro.core.policies import BASELINE, CNTD_ADAPTIVE
+    from repro.core.simulator import simulate
+    from repro.core.workloads import generate
+
+    spec = dataclasses.replace(MIX_SPECS["bursty_serve"], n_tasks=150)
+    wl = generate(spec, seed=0)
+    base, _ = simulate(wl, BASELINE)
+    hyb, _ = simulate(wl, CNTD_PREDICTIVE)
+    ad, _ = simulate(wl, CNTD_ADAPTIVE)
+    assert hyb.n_prearm > 0
+    assert 0 <= hyb.n_mispredict <= hyb.n_prearm
+    assert hyb.overhead_vs(base) < 1.0
+    # pre-arming exploits at least as much f_min residency as reactive-only
+    assert hyb.exploited_slack >= ad.exploited_slack

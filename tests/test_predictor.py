@@ -51,3 +51,112 @@ def test_permutation_importance_normalized():
     for tgt, imps in r.importance.items():
         vals = list(imps.values())
         assert max(vals) <= 1.0 + 1e-9 and min(vals) >= 0.0
+
+
+# --------------------------------------------------------------------------
+# PR satellites: dataset feature variance, SMAPE zero-denominator semantics,
+# vectorized tree traversal, and the online predictor's regime machine
+# --------------------------------------------------------------------------
+
+def test_dataset_features_nondegenerate_on_p2p_workload():
+    """Regression: p2p locality used to collapse to a constant (derived
+    from the constant group size), zeroing its permutation importance.  On
+    a p2p-heavy app every feature column must carry variance — locality
+    now tells same-node pairs (1.0) from cross-node pairs (0.5) via the
+    partner matrix."""
+    import dataclasses
+
+    spec = dataclasses.replace(APPS["nas_lu.E.1024"], n_tasks=600)
+    wl = generate(spec, seed=0)
+    _, trace = simulate(wl, BASELINE, collect_trace=True)
+    assert trace.partner is not None
+    x, _, names = build_dataset(trace, with_prev=True, max_rows=20_000)
+    var = x.var(axis=0)
+    for j, name in enumerate(names):
+        assert var[j] > 0.0, f"degenerate feature column: {name}"
+    # p2p rows must split into same-node (1.0) and cross-node (0.5) pairs;
+    # collectives keep the fractional node-residency value
+    p2p_loc = x[x[:, names.index("call_type")] == 1.0, names.index("locality")]
+    assert {0.5, 1.0} <= set(np.unique(p2p_loc).tolist())
+
+
+def test_smape_zero_denominator_counts_as_exact_hit():
+    from repro.core.predictor import zero_denominator_fraction
+
+    # all-zero pairs are exact hits, not dropped rows
+    assert smape(np.zeros(4), np.zeros(4)) == 0.0
+    # mixed: two exact zero hits dilute one 100%-wrong row to 25% overall
+    pred = np.array([0.0, 0.0, 0.0, 1.0])
+    act = np.array([0.0, 0.0, 1.0, 1.0])
+    assert abs(smape(pred, act) - 25.0) < 1e-9
+    assert zero_denominator_fraction(pred, act) == 0.5
+    assert zero_denominator_fraction(np.array([]), np.array([])) == 0.0
+
+
+def test_predictability_result_surfaces_zero_fraction():
+    wl = generate(APPS["nas_is.D.128"], seed=0)
+    _, trace = simulate(wl, BASELINE, collect_trace=True)
+    r = evaluate_predictability("is", trace, with_prev=True, n_trees=3)
+    assert sorted(r.zero_frac) == sorted(r.smape)
+    assert all(0.0 <= v <= 1.0 for v in r.zero_frac.values())
+
+
+def test_vectorized_tree_predict_matches_scalar_walk():
+    """The packed level-order descent must route every row exactly as the
+    recursive node walk would (same ``<=`` splits, same leaves)."""
+    from repro.core.predictor import DecisionTree
+
+    rng = np.random.default_rng(7)
+    x = rng.normal(0, 1, (800, 6))
+    y = x[:, 0] * 2 - np.abs(x[:, 2]) + 0.05 * rng.normal(size=800)
+    tree = DecisionTree(max_depth=8, rng=np.random.default_rng(3)).fit(x, y)
+
+    def walk_one(row):
+        i = 0
+        while tree.nodes[i].feature >= 0:
+            n = tree.nodes[i]
+            i = n.left if row[n.feature] <= n.threshold else n.right
+        return tree.nodes[i].value
+
+    xt = rng.normal(0, 1, (300, 6))
+    fast = tree.predict(xt)
+    slow = np.array([walk_one(r) for r in xt])
+    np.testing.assert_array_equal(fast, slow)
+    assert tree.predict(np.empty((0, 6))).shape == (0,)
+
+
+def test_online_predictor_regime_transitions_and_determinism():
+    from repro.core.predictor import OnlinePredictor
+
+    def feed(p):
+        rng = np.random.default_rng(42)
+        for i in range(200):
+            site = i % 2
+            for r in range(4):
+                p.observe(site, r, float(rng.uniform(0.5e-3, 2e-3)),
+                          comp=3e-3)
+            p.note_copy_ranks(site, rng.uniform(0.1e-3, 0.4e-3, 4))
+
+    p = OnlinePredictor()
+    val, src = p.predict(0, 0)
+    assert src == "cold" and np.isnan(val)
+    p.observe(0, 0, 1e-3)
+    val, src = p.predict(0, 0)
+    assert src == "ema" and val == 1e-3          # EMA seeds at first slack
+    assert not p.warm
+    feed(p)
+    assert p.warm and p.n_refits >= 1
+    val, src = p.predict(0, 0)
+    assert src == "forest" and 0.0 <= val < 1.0
+    preds, src = p.predict_ranks(0, 6)
+    assert src == "forest"
+    assert np.isnan(preds[4:]).all()             # never-seen ranks stay cold
+
+    q = OnlinePredictor()
+    q.observe(0, 0, 1e-3)
+    feed(q)
+    # seeded counter-triggered refits: same stream => bitwise-same model
+    np.testing.assert_array_equal(p.predict_ranks(1, 4)[0],
+                                  q.predict_ranks(1, 4)[0])
+    p.reset()
+    assert p.predict(0, 0)[1] == "cold" and not p.warm
