@@ -10,7 +10,7 @@ full JSON artifacts under artifacts/.
   roofline— 3-term roofline per (arch x shape x mesh) from dry-run artifacts
   runtime — framework micro-benchmarks (simulator/governor/barrier cost)
   dist    — distribution substrate (int8 compressed_psum, straggler detector)
-  serve   — static vs continuous batching tok/s + priced decode slack
+  serve   — static vs continuous vs continuous+pallas tok/s + priced decode slack
   fleet   — static-N vs autoscaled replica fleet: joules/token, SLO
             attainment, prefix-cache hit rate under the cluster watt cap
   cluster — slack-driven cap arbiter vs static equal-split + trace replay

@@ -3,21 +3,37 @@
 On a CPU host (this container) the kernels execute in interpret mode —
 the kernel body runs as traced JAX ops, validating BlockSpec indexing and
 numerics; on a TPU backend the same call sites compile to Mosaic.
+
+``REPRO_PALLAS_INTERPRET=0/1`` overrides the platform default (CI forces
+the interpret branch explicitly; TPU users can A/B interpret mode).  The
+flag is read at trace time: wrappers are jitted, so flipping the env var
+after a shape has compiled does not retrace it.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import (
+    paged_attention_pallas,
+    paged_attention_scatter_pallas,
+    paged_scatter_pallas,
+)
 from repro.kernels.rglru_scan import rglru_scan_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd import ssd_pallas
 
 
 def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in ("1", "true", "yes", "on"):
+        return True
+    if env in ("0", "false", "no", "off"):
+        return False
     return jax.default_backend() != "tpu"
 
 
@@ -44,4 +60,70 @@ def ssd_scan(x, dt, a_log, b, c, chunk: int = 128):
 def rglru_scan(a, b, h0, chunk: int = 64, width_block: int = 512):
     return rglru_scan_pallas(
         a, b, h0, chunk=chunk, width_block=width_block, interpret=_interpret()
+    )
+
+
+@partial(jax.jit, static_argnames=("window",))
+def paged_attention(q, k_pages, v_pages, table, pos, window: int = 0):
+    """q: (B,Hkv,G,D); pages: (P,page,Hkv,D); table: (B,M); pos: (B,)."""
+    return paged_attention_pallas(
+        q, k_pages, v_pages, table, pos, window=window, interpret=_interpret()
+    )
+
+
+@partial(jax.jit, static_argnames=("window",))
+def paged_attention_quant(q, k_pages, v_pages, k_scale_pages, v_scale_pages,
+                          table, pos, window: int = 0):
+    """int8 pages + (P,page,Hkv) float32 scale pages, dequant fused in."""
+    return paged_attention_pallas(
+        q, k_pages, v_pages, table, pos,
+        k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+        window=window, interpret=_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("window",))
+def paged_attention_scatter(q, k_new, v_new, k_pages, v_pages, table, pos,
+                            page_idx, off, window: int = 0):
+    """Fused decode step (scatter prologue + paged attention, one
+    dispatch).  Returns ``(out, (k_pages, v_pages))``."""
+    return paged_attention_scatter_pallas(
+        q, k_new, v_new, k_pages, v_pages, table, pos, page_idx, off,
+        window=window, interpret=_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("window",))
+def paged_attention_scatter_quant(q, k_new, v_new, k_scale_new, v_scale_new,
+                                  k_pages, v_pages, k_scale_pages,
+                                  v_scale_pages, table, pos, page_idx, off,
+                                  window: int = 0):
+    """Fused decode step over int8 pages; the prologue also lands the new
+    row's scales, the walk dequants in-flight.  Returns
+    ``(out, (k_pages, v_pages, k_scale_pages, v_scale_pages))``."""
+    return paged_attention_scatter_pallas(
+        q, k_new, v_new, k_pages, v_pages, table, pos, page_idx, off,
+        k_scale_new=k_scale_new, v_scale_new=v_scale_new,
+        k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+        window=window, interpret=_interpret(),
+    )
+
+
+@jax.jit
+def paged_scatter(k_pages, v_pages, k_new, v_new, page_idx, off):
+    """In-place (aliased) scatter of each slot's new K/V row into its page."""
+    return paged_scatter_pallas(
+        (k_pages, v_pages), (k_new, v_new), page_idx, off,
+        interpret=_interpret(),
+    )
+
+
+@jax.jit
+def paged_scatter_quant(k_pages, v_pages, k_scale_pages, v_scale_pages,
+                        k_new, v_new, k_scale_new, v_scale_new, page_idx, off):
+    """One grid pass updates the int8 K/V pages and both scale pools."""
+    return paged_scatter_pallas(
+        (k_pages, v_pages, k_scale_pages, v_scale_pages),
+        (k_new, v_new, k_scale_new, v_scale_new),
+        page_idx, off, interpret=_interpret(),
     )

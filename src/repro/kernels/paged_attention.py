@@ -1,0 +1,350 @@
+"""Paged-decode attention Pallas kernel + fused K/V scatter epilogue.
+
+The serving hot path (vLLM-style): each decode step attends one new
+query token per slot against that slot's K/V pages, addressed through a
+per-request page table.  The XLA reference in ``serve/kvcache.py``
+materializes a contiguous ``(B, M*page, Hkv, D)`` gather every step;
+this kernel never does — the page table is a *scalar-prefetch* operand,
+so the kernel body reads ``table[b, j]`` itself and pulls exactly one
+physical page at a time out of the HBM-resident pool.
+
+TPU mapping: grid = (batch, kv_heads) — one program per (slot, kv head).
+The K/V pools are ``memory_space=ANY`` operands (they stay in HBM; only
+the touched pages ever move on-chip), and the kernel body walks the
+request's table row with a ``fori_loop``, pulling two pages' K/V tiles
+per iteration (a ``(2*page, D)`` block; odd trailing pages are padded by
+a self-masking re-load of the last entry) and folding each block into an
+online-softmax carry (m, l, acc) exactly like ``flash_attention.py``
+folds k-blocks.
+Keeping the page walk *inside* the program — rather than as a third,
+sequential grid dimension — means the per-program dispatch cost is paid
+``B*Hkv`` times instead of ``B*Hkv*M`` times, which is what makes the
+kernel profitable even in interpret mode on CPU hosts; on a compiled
+Mosaic build each page read lowers to a local HBM→VMEM copy (the
+``pltpu.make_async_copy`` idiom, which also enables prefetching page
+``j+1`` while page ``j`` is in the MXU).  The GQA group of
+``G = Hq // Hkv`` query heads rides along as the block's row dimension,
+so the score tile is a single ``(G, page)`` MXU matmul.  Under
+``kv_quant`` the pages are int8 with per-(token, head) float32 scale
+pages; dequant is fused into the page load (one multiply on the tile
+already on-chip) instead of materializing a dequantized cache.
+
+Causal masking needs no query position: decode queries sit at position
+``pos[b]`` and every stored key at ``j*page + offset`` is valid iff it
+is ``<= pos[b]`` (sliding window additionally requires
+``> pos[b] - window``).  Pages past the live prefix belong to other
+requests or the scratch page — their positions exceed ``pos[b]``, so
+the same mask that implements causality also implements isolation.
+
+The scatter (``paged_scatter_pallas``) is the write half of the step:
+the new token's K/V row (and scale rows) land at
+``pages[table[b, pos // page], pos % page]`` via ``input_output_aliases``
+— an in-place block write into the existing page arrays, bit-identical
+to the ``.at[page_idx, off].set()`` path (tier-1 asserted) without XLA's
+copy-on-donate round trip.  The serving engine uses the *fused* form
+(``paged_attention_scatter_pallas``): with a ``(B, Hkv)`` grid the
+scatter is a prologue of the attention program itself — program (b, h)
+writes only slot ``b``'s row at head ``h`` and then walks only slot
+``b``'s pages, so the in-place store can never race another program's
+page reads, and the whole read-modify-attend step is one dispatch.
+(Idle slots are parked on the scratch page, which every program's mask
+excludes, so even a torn scratch write is unobservable.)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _load_page(pool_ref, scale_ref, pid, h):
+    """One (page, D) tile out of an ANY-space pool, dequantized in-flight
+    when the pool carries int8 pages + a float32 scale pool."""
+    tile = pool_ref[pl.ds(pid, 1), :, h, :][0].astype(jnp.float32)
+    if scale_ref is not None:
+        tile = tile * scale_ref[pl.ds(pid, 1), :, h][0][:, None]
+    return tile
+
+
+def _page_walk(tbl_ref, b, h, q, p0, k_ref, v_ref, ks_ref, vs_ref,
+               *, scale: float, window: int, page: int, n_pages: int):
+    """Online-softmax walk over one request's table row, two pages per
+    iteration (halves loop-carry overhead; the score tile is a single
+    ``(G, 2*page)`` MXU matmul).  For odd ``n_pages`` the trailing
+    phantom page re-loads the last table entry, but its key positions
+    ``>= n_pages * page`` exceed every legal ``pos`` — the causal mask
+    zeroes it, so no separate epilogue iteration is needed.  Returns the
+    normalized (G, D) float32 attention output."""
+    g, d = q.shape
+
+    def body(jj, carry):
+        m_prev, l_prev, acc = carry
+        j0 = 2 * jj
+        j1 = jnp.minimum(j0 + 1, n_pages - 1)
+        pa = tbl_ref[b, j0]                            # the gather
+        pb = tbl_ref[b, j1]
+        k = jnp.concatenate(
+            [_load_page(k_ref, ks_ref, pa, h), _load_page(k_ref, ks_ref, pb, h)],
+            axis=0,
+        )                                              # (2*page, D)
+        v = jnp.concatenate(
+            [_load_page(v_ref, vs_ref, pa, h), _load_page(v_ref, vs_ref, pb, h)],
+            axis=0,
+        )
+
+        s = (q @ k.T) * scale                          # (G, 2*page) — MXU
+        iota = jax.lax.broadcasted_iota(jnp.int32, (g, page), 1)
+        k_pos = jnp.concatenate(
+            [j0 * page + iota, (j0 + 1) * page + iota], axis=1
+        )                                              # phantom half masks itself
+        valid = k_pos <= p0
+        if window:
+            valid &= k_pos > p0 - window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                         # (G, 2*page)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + p @ v                       # (G, D) — MXU
+        return m_new, l_new, acc
+
+    init = (jnp.full((g, 1), NEG_INF, jnp.float32),    # m (running max)
+            jnp.zeros((g, 1), jnp.float32),            # l (running denom)
+            jnp.zeros((g, d), jnp.float32))            # acc (weighted values)
+    m_f, l_f, acc = jax.lax.fori_loop(0, (n_pages + 1) // 2, body, init)
+    return acc / jnp.maximum(l_f, 1e-20)
+
+
+def _paged_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+                  scale: float, window: int, page: int, n_pages: int,
+                  quant: bool):
+    if quant:
+        ks_ref, vs_ref, o_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, = rest
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    q = q_ref[0, 0].astype(jnp.float32)                # (G, D)
+    out = _page_walk(tbl_ref, b, h, q, pos_ref[b], k_ref, v_ref, ks_ref,
+                     vs_ref, scale=scale, window=window, page=page,
+                     n_pages=n_pages)
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_pallas(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    table: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    k_scale_pages: Optional[jnp.ndarray] = None,
+    v_scale_pages: Optional[jnp.ndarray] = None,
+    window: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Single-token decode attention over paged KV.
+
+    q: (B, Hkv, G, D) post-RoPE queries (GQA groups under their kv head);
+    k_pages/v_pages: (P, page, Hkv, D) physical pool (int8 when quantized);
+    k/v_scale_pages: (P, page, Hkv) float32 dequant scales (or None);
+    table: (B, M) int32 page table; pos: (B,) int32 query positions.
+    Returns (B, Hkv, G, D) in q.dtype.
+    """
+    bsz, hkv, g, d = q.shape
+    page = k_pages.shape[1]
+    m = table.shape[1]
+    quant = k_scale_pages is not None
+    scale = 1.0 / math.sqrt(d)
+
+    # table/pos are scalar-prefetch operands: available before the body
+    # runs, so the fori_loop can chase ``table[b, j]`` page indices.  The
+    # pools are ANY-space refs — never block-mapped, only the pages the
+    # loop touches are read.
+    q_spec = pl.BlockSpec((1, 1, g, d), lambda b, h, tbl, ps: (b, h, 0, 0))
+    kv_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    in_specs = [q_spec, kv_spec, kv_spec]
+    args = [q, k_pages, v_pages]
+    if quant:
+        in_specs += [kv_spec, kv_spec]
+        args += [k_scale_pages, v_scale_pages]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, hkv),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b, h, tbl, ps: (b, h, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _paged_kernel, scale=scale, window=window, page=page,
+            n_pages=m, quant=quant,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(table, pos, *args)
+
+
+def _paged_step_kernel(tbl_ref, pos_ref, pidx_ref, offw_ref, q_ref, *rest,
+                       scale: float, window: int, page: int, n_pages: int,
+                       quant: bool):
+    # rest = (*new_rows, *pool_inputs, o, *pool_outputs); the pool outputs
+    # alias the pool inputs, so the body only ever touches the output refs
+    if quant:
+        kn_ref, vn_ref, ksn_ref, vsn_ref = rest[:4]
+        o_ref, k_ref, v_ref, ks_ref, vs_ref = rest[8:]
+    else:
+        kn_ref, vn_ref = rest[:2]
+        ks_ref = vs_ref = None
+        o_ref, k_ref, v_ref = rest[4:]
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+
+    # scatter prologue: land the new token's row in its page (in place,
+    # aliased) *before* the walk, so the walk attends to it.  Program
+    # (b, h) writes only slot b's row at head h and reads only slot b's
+    # pages at head h — no cross-program hazard.
+    pw = pidx_ref[b]
+    ow = offw_ref[b]
+    k_ref[pl.ds(pw, 1), pl.ds(ow, 1), h, :] = kn_ref[0, 0][None, None, :]
+    v_ref[pl.ds(pw, 1), pl.ds(ow, 1), h, :] = vn_ref[0, 0][None, None, :]
+    if quant:
+        ks_ref[pl.ds(pw, 1), pl.ds(ow, 1), h] = ksn_ref[0, 0][None, None]
+        vs_ref[pl.ds(pw, 1), pl.ds(ow, 1), h] = vsn_ref[0, 0][None, None]
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (G, D)
+    out = _page_walk(tbl_ref, b, h, q, pos_ref[b], k_ref, v_ref, ks_ref,
+                     vs_ref, scale=scale, window=window, page=page,
+                     n_pages=n_pages)
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_scatter_pallas(
+    q: jnp.ndarray,
+    k_new: jnp.ndarray,
+    v_new: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    table: jnp.ndarray,
+    pos: jnp.ndarray,
+    page_idx: jnp.ndarray,
+    off: jnp.ndarray,
+    *,
+    k_scale_new: Optional[jnp.ndarray] = None,
+    v_scale_new: Optional[jnp.ndarray] = None,
+    k_scale_pages: Optional[jnp.ndarray] = None,
+    v_scale_pages: Optional[jnp.ndarray] = None,
+    window: int = 0,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...]]:
+    """Fused decode step: scatter the new K/V row, then attend — one
+    dispatch.  Bit-identical to ``paged_scatter_pallas`` followed by
+    ``paged_attention_pallas`` (tier-1 asserted).
+
+    k_new/v_new: (B, Hkv, D) the new token's K/V rows (pool dtype —
+    already quantized when the pool is int8); k/v_scale_new: (B, Hkv)
+    their dequant scales; page_idx/off: (B,) int32 write destinations
+    (idle slots point at the scratch page).  Other shapes as
+    :func:`paged_attention_pallas`.  Returns ``(out, updated_pools)``.
+    """
+    bsz, hkv, g, d = q.shape
+    page = k_pages.shape[1]
+    m = table.shape[1]
+    quant = k_scale_pages is not None
+    scale = 1.0 / math.sqrt(d)
+
+    q_spec = pl.BlockSpec((1, 1, g, d), lambda b, h, *s: (b, h, 0, 0))
+    row_spec = pl.BlockSpec((1, 1, d), lambda b, h, *s: (b, h, 0))
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    if quant:
+        srow_spec = pl.BlockSpec((1, 1), lambda b, h, *s: (b, h))
+        new_specs = [row_spec, row_spec, srow_spec, srow_spec]
+        news = [k_new, v_new, k_scale_new, v_scale_new]
+        pools = [k_pages, v_pages, k_scale_pages, v_scale_pages]
+    else:
+        new_specs = [row_spec, row_spec]
+        news = [k_new, v_new]
+        pools = [k_pages, v_pages]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,                 # table, pos, page_idx, off
+        grid=(bsz, hkv),
+        in_specs=[q_spec] + new_specs + [any_spec] * len(pools),
+        out_specs=[q_spec] + [any_spec] * len(pools),
+    )
+    base = 4 + 1 + len(news)                   # scalar-prefetch + q + rows
+    out = pl.pallas_call(
+        functools.partial(_paged_step_kernel, scale=scale, window=window,
+                          page=page, n_pages=m, quant=quant),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((bsz, hkv, g, d), q.dtype)]
+                  + [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in pools],
+        input_output_aliases={base + i: 1 + i for i in range(len(pools))},
+        interpret=interpret,
+    )(table, pos, page_idx, off, q, *news, *pools)
+    return out[0], tuple(out[1:])
+
+
+def _scatter_kernel(pi_ref, off_ref, *refs, n_arrays: int):
+    # refs = (*page_inputs, *new_rows, *page_outputs); the page outputs
+    # alias the page inputs, so the only work is one row store per array
+    news = refs[n_arrays:2 * n_arrays]
+    outs = refs[2 * n_arrays:]
+    for new_ref, o_ref in zip(news, outs):
+        o_ref[0, 0] = new_ref[0]
+
+
+def paged_scatter_pallas(
+    pages: Sequence[jnp.ndarray],
+    new_rows: Sequence[jnp.ndarray],
+    page_idx: jnp.ndarray,
+    off: jnp.ndarray,
+    *,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, ...]:
+    """Scatter each slot's new token row into its page, in place.
+
+    pages[i]: (P, page, ...) pool array; new_rows[i]: (B, ...) the new
+    token's row per slot; page_idx/off: (B,) int32 destinations.  All
+    arrays share one grid pass (one call updates k, v and both scale
+    pools).  Idle slots target (SCRATCH_PAGE, 0); the grid is sequential
+    so coinciding writes resolve last-wins, and scratch is never read.
+    """
+    n = len(pages)
+    bsz = new_rows[0].shape[0]
+
+    def page_spec(a):
+        blk = (1, 1) + a.shape[2:]
+        zeros = (0,) * (a.ndim - 2)
+        return pl.BlockSpec(blk, lambda b, pi, of, z=zeros: (pi[b], of[b]) + z)
+
+    def row_spec(a):
+        blk = (1,) + a.shape[1:]
+        zeros = (0,) * (a.ndim - 1)
+        return pl.BlockSpec(blk, lambda b, pi, of, z=zeros: (b,) + z)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz,),
+        in_specs=[page_spec(a) for a in pages] + [row_spec(a) for a in new_rows],
+        out_specs=[page_spec(a) for a in pages],
+    )
+    out = pl.pallas_call(
+        functools.partial(_scatter_kernel, n_arrays=n),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(a.shape, a.dtype) for a in pages],
+        # operand indices count the 2 scalar-prefetch refs
+        input_output_aliases={2 + i: i for i in range(n)},
+        interpret=interpret,
+    )(page_idx, off, *pages, *new_rows)
+    return tuple(out)

@@ -42,6 +42,33 @@ def attention_ref(
     return out.reshape(b, hq, s, d).astype(q.dtype)
 
 
+def paged_attention_ref(
+    q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+    table: jnp.ndarray, pos: jnp.ndarray,
+    *, k_scale_pages=None, v_scale_pages=None, window: int = 0,
+) -> jnp.ndarray:
+    """Materialized paged decode attention: gather the full (B, M*page)
+    view through the table, dequantize, mask by position, softmax.
+    Shapes as :func:`repro.kernels.paged_attention.paged_attention_pallas`."""
+    b, hkv, g, d = q.shape
+    page = k_pages.shape[1]
+    t = table.shape[1] * page
+    ck = k_pages[table].reshape(b, t, hkv, d).astype(jnp.float32)
+    cv = v_pages[table].reshape(b, t, hkv, d).astype(jnp.float32)
+    if k_scale_pages is not None:
+        ck = ck * k_scale_pages[table].reshape(b, t, hkv)[..., None]
+        cv = cv * v_scale_pages[table].reshape(b, t, hkv)[..., None]
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32), ck) / math.sqrt(d)
+    k_pos = jnp.arange(t, dtype=jnp.int32)
+    valid = k_pos[None, :] <= pos[:, None]
+    if window:
+        valid &= k_pos[None, :] > pos[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, cv)
+    return out.astype(q.dtype)
+
+
 def ssd_ref(
     x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
     b: jnp.ndarray, c: jnp.ndarray,

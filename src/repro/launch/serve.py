@@ -93,7 +93,8 @@ def _run_continuous(args, cfg, params, mesh, n_dev: int, mp: int) -> None:
     max_len = args.prompt_len + args.steps + args.page_size
     max_len += (-max_len) % args.page_size
     eng = ContinuousEngine(cfg, params, n_slots=args.slots, max_len=max_len,
-                           page=args.page_size, temperature=args.temperature)
+                           page=args.page_size, temperature=args.temperature,
+                           attn_kernel=args.attn_kernel)
     if mp > 1 or n_dev > 1:
         eng.pool.blocks = jax.device_put(
             eng.pool.blocks, SH.page_pool_shardings(mesh, eng.pool.blocks)
@@ -296,7 +297,8 @@ def _run_fleet_real(args, cfg, params) -> None:
     for _ in range(args.fleet):
         eng = ContinuousEngine(cfg, params, n_slots=args.slots,
                                max_len=max_len, page=args.page_size,
-                               temperature=args.temperature)
+                               temperature=args.temperature,
+                               attn_kernel=args.attn_kernel)
         eng.enable_prefix_cache()
         warm = make_batch(cfg, batch=1, seq_len=len(reqs[0].prompt),
                           kind="prefill")
@@ -379,6 +381,10 @@ def main() -> None:
                     help="Poisson arrival rate (req/s)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--attn-kernel", choices=["xla", "pallas"], default="xla",
+                    help="decode attention hot path: XLA gather/scatter "
+                         "reference or the Pallas paged kernel (fused "
+                         "dequant + scatter/sample epilogue)")
     ap.add_argument("--tpot-target", type=float, default=0.0,
                     help="TPOT SLO target (s); 0 disables throttling")
     ap.add_argument("--theta", default="",

@@ -103,19 +103,32 @@ class ServeEngine:
 # paged step builders
 # --------------------------------------------------------------------------
 
-def make_paged_decode_step(cfg) -> Callable:
-    """decode(params, token (B,), pos (B,), table (B,M), blocks) -> (logits, blocks).
+def make_paged_decode_step(cfg, attn_kernel: str = "xla",
+                           fused_sample: bool = False) -> Callable:
+    """decode(params, token (B,), pos (B,), table (B,M), blocks) -> (out, blocks).
 
     Reuses the stock ``transformer.decode_step`` walker (scan/rem stack,
     MoE dropless decode, SSM/RG-LRU state) and swaps only the attention:
-    a closure over the page table routes it through the paged pool.
+    a closure over the page table routes it through the paged pool, via
+    the XLA reference path or the Pallas paged kernel (``attn_kernel``).
+
+    With ``fused_sample`` the greedy argmax runs inside the same jitted
+    dispatch and ``out`` is the sampled ``(B,)`` int32 tokens — the step
+    ships B words back to the host instead of a (B, vocab) logits block
+    plus a second argmax dispatch.  Callers that need logits (sampling
+    with temperature) keep the unfused step.
     """
 
     def step(params, token, pos, table, blocks):
         def paged_attn(p_attn, h, bc):
-            return paged_attention_decode(cfg, p_attn, h, pos, table, bc)
+            return paged_attention_decode(
+                cfg, p_attn, h, pos, table, bc, kernel=attn_kernel
+            )
 
-        return _decode(cfg, params, token, pos, blocks, attn_fn=paged_attn)
+        logits, blocks = _decode(cfg, params, token, pos, blocks, attn_fn=paged_attn)
+        if fused_sample:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), blocks
+        return logits, blocks
 
     return step
 
@@ -169,6 +182,12 @@ class ContinuousEngine:
     shrinks the pool below full occupancy to exercise admission control.
     For windowed archs prompts must fit inside the window (the pool
     stores positions linearly and masks by window at read).
+
+    ``attn_kernel`` selects the decode attention hot path: ``"xla"`` (the
+    gather/scatter reference) or ``"pallas"`` (the paged kernel with the
+    fused scatter epilogue; greedy decoding additionally samples inside
+    the decode dispatch).  Both are token-for-token identical to the
+    dense engine (tier-1 asserted).
     """
 
     cfg: Any
@@ -178,6 +197,7 @@ class ContinuousEngine:
     page: int = 16
     num_pages: Optional[int] = None
     temperature: float = 0.0
+    attn_kernel: str = "xla"
     # optional repro.obs.tracer.SpanTracer (duck-typed: .serve_event):
     # batch join/evict instants land on the trace's serve track
     tracer: Any = None
@@ -186,11 +206,20 @@ class ContinuousEngine:
     prefix_cache: Any = None
 
     def __post_init__(self):
+        if self.attn_kernel not in ("xla", "pallas"):
+            raise ValueError(f"unknown attn_kernel {self.attn_kernel!r}")
         self.pool = PagedKVPool(
             self.cfg, self.n_slots, self.max_len, self.page, self.num_pages
         )
+        # sampling with temperature needs host-side logits; greedy decode
+        # on the pallas path samples inside the decode dispatch
+        self._fused_sample = (
+            self.attn_kernel == "pallas" and self.temperature <= 0.0
+        )
         self._prefill = jax.jit(partial(_prefill, self.cfg))
-        self._decode = jax.jit(make_paged_decode_step(self.cfg))
+        self._decode = jax.jit(make_paged_decode_step(
+            self.cfg, self.attn_kernel, self._fused_sample
+        ))
         self._join = jax.jit(make_join_step(self.cfg))
         self._clone = jax.jit(make_clone_pages(self.cfg))
         m = self.pool.max_pages_per_req
@@ -489,20 +518,31 @@ class EngineSession:
         sched = self.sched
         for req in sched.active.values():
             eng._grow_pages(req)
+        # clamp the table to the live pages: no request's K/V extends past
+        # ceil((max_pos + 1) / page) pages, so neither the XLA gather nor
+        # the pallas grid should pay O(max_len) per token.  (Each distinct
+        # width is its own jit bucket — widths only grow, and there are at
+        # most max_pages_per_req of them.)
+        max_pos = int(eng._lengths.max())
+        m_live = min(eng._table.shape[1], max_pos // eng.pool.page + 1)
         t0 = time.monotonic()
-        logits, blocks = eng._decode(
+        out, blocks = eng._decode(
             eng.params,
             jnp.asarray(eng._tokens),
             jnp.asarray(eng._lengths),
-            jnp.asarray(eng._table),
+            jnp.asarray(eng._table[:, :m_live]),
             eng.pool.blocks,
         )
-        logits = jax.block_until_ready(logits)
+        out = jax.block_until_ready(out)
         t1 = time.monotonic()
         eng.pool.blocks = blocks
         if self.meter is not None:
             self.meter.step(t0, t1, sched.n_active, eng.n_slots)
-        greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        if eng._fused_sample:
+            logits, greedy = None, np.asarray(out, np.int32)
+        else:
+            logits = out
+            greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         tnow = self.now()
         for slot, req in list(sched.active.items()):
             eng._lengths[slot] += 1

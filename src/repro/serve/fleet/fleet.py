@@ -360,7 +360,10 @@ def run_engine_fleet(engines, requests, *, cap_w: float, floor_w: float,
     replicas interleave one batched decode step per round (all idle ⇒ one
     metered sleep toward the next arrival); the arbiter reprices per
     epoch from each replica's governor snapshot, same power model as
-    :class:`~repro.cluster.job.GovernorJob`.  Returns
+    :class:`~repro.cluster.job.GovernorJob`.  Replicas may run either
+    decode kernel (``attn_kernel="xla"``/``"pallas"``) — both are
+    token-for-token identical, so routing/prefix decisions never depend
+    on which replica serves a request.  Returns
     ``(finished, router, arbiter, sessions)``.
     """
     import time as _time

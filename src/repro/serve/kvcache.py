@@ -109,12 +109,22 @@ def init_pool_blocks(cfg, num_pages: int, page: int, n_slots: int) -> Params:
 # paged decode attention
 # --------------------------------------------------------------------------
 
-def paged_attention_decode(cfg, p, x, pos, table, block):
+def paged_attention_decode(cfg, p, x, pos, table, block, kernel: str = "xla"):
     """Single-token attention over paged KV.
 
     x: (B,1,d); pos: (B,) int32 write positions (the new token's absolute
     position per request); table: (B, M) int32 page table (0 = scratch);
     block: one attention page block.  Returns (out (B,1,d), new block).
+
+    ``kernel`` selects the hot path: ``"xla"`` scatters with
+    ``.at[].set()`` and gathers a contiguous ``(B, M*page, Hkv, D)`` view
+    (the reference oracle — callers bound its cost by passing a table
+    clamped to the live pages); ``"pallas"`` routes through
+    :mod:`repro.kernels.ops` — one fused dispatch whose prologue lands
+    the new K/V row in its page (aliased, in place) and whose body walks
+    the page table block-by-block, with int8 dequant fused into the page
+    loads.  Both paths quantize the new token's K/V in XLA first, so the
+    *stored* pages are bit-identical.
     """
     b = x.shape[0]
     page = block["k_pages"].shape[1]
@@ -125,18 +135,45 @@ def paged_attention_decode(cfg, p, x, pos, table, block):
 
     page_idx = table[jnp.arange(b), jnp.minimum(pos // page, m - 1)]  # (B,)
     off = pos % page
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    window = cfg.window if cfg.attention in ("swa", "local") and cfg.window else 0
     new_block = dict(block)
     if cfg.kv_quant:
         kq, k_sc = _kv_quantize(k)                             # (B,1,H,D),(B,1,H)
         vq, v_sc = _kv_quantize(v)
+        k, v = kq, vq
+
+    if kernel == "pallas":
+        from repro.kernels import ops as pallas_ops
+
+        qg = L._gqa_reshape(q, hkv)[:, 0]                      # (B,Hkv,G,D)
+        if cfg.kv_quant:
+            out, (kp, vp, ksp, vsp) = pallas_ops.paged_attention_scatter_quant(
+                qg, k[:, 0], v[:, 0], k_sc[:, 0], v_sc[:, 0],
+                block["k_pages"], block["v_pages"],
+                block["k_scale_pages"], block["v_scale_pages"],
+                table, pos, page_idx, off, window=window,
+            )
+            new_block.update(k_pages=kp, v_pages=vp,
+                             k_scale_pages=ksp, v_scale_pages=vsp)
+        else:
+            out, (kp, vp) = pallas_ops.paged_attention_scatter(
+                qg, k[:, 0], v[:, 0], block["k_pages"], block["v_pages"],
+                table, pos, page_idx, off, window=window,
+            )
+            new_block.update(k_pages=kp, v_pages=vp)
+        out = out.astype(x.dtype).reshape(b, 1, cfg.n_heads * hd) @ p["wo"]
+        return out, new_block
+    if kernel != "xla":
+        raise ValueError(f"unknown attention kernel {kernel!r}")
+
+    if cfg.kv_quant:
         new_block["k_scale_pages"] = block["k_scale_pages"].at[page_idx, off].set(k_sc[:, 0])
         new_block["v_scale_pages"] = block["v_scale_pages"].at[page_idx, off].set(v_sc[:, 0])
-        k, v = kq, vq
     new_block["k_pages"] = block["k_pages"].at[page_idx, off].set(k[:, 0])
     new_block["v_pages"] = block["v_pages"].at[page_idx, off].set(v[:, 0])
 
     # gather this batch's logical KV views: (B, M, page, H, D) -> (B, T, H, D)
-    hkv, hd = cfg.n_kv_heads, cfg.head_dim
     t = m * page
     ck = new_block["k_pages"][table].reshape(b, t, hkv, hd)
     cv = new_block["v_pages"][table].reshape(b, t, hkv, hd)
@@ -151,8 +188,8 @@ def paged_attention_decode(cfg, p, x, pos, table, block):
     s *= 1.0 / math.sqrt(hd)
     k_pos = jnp.arange(t, dtype=jnp.int32)
     valid = k_pos[None, :] <= pos[:, None]                     # (B, T)
-    if cfg.attention in ("swa", "local") and cfg.window:
-        valid &= k_pos[None, :] > pos[:, None] - cfg.window
+    if window:
+        valid &= k_pos[None, :] > pos[:, None] - window
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     prob = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum(

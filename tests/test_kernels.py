@@ -126,3 +126,133 @@ def test_rglru_matches_model_associative_scan():
     h_assoc, _ = linear_scan(a, b, h0)
     h_pallas = ops.rglru_scan(a, b, h0, chunk=8, width_block=64)
     np.testing.assert_allclose(np.asarray(h_pallas), np.asarray(h_assoc), atol=2e-5, rtol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# paged decode attention + fused scatter epilogue
+# --------------------------------------------------------------------------
+
+def _paged_case(b, hkv, g, d, page, m, n_pages, quant):
+    q = jnp.asarray(RNG.normal(0, 1, (b, hkv, g, d)), jnp.float32)
+    table = jnp.asarray(
+        RNG.choice(n_pages, size=(b, m), replace=False).reshape(b, m)
+        if b * m <= n_pages else RNG.integers(0, n_pages, (b, m)),
+        jnp.int32,
+    )
+    pos = jnp.asarray(RNG.integers(0, m * page, (b,)), jnp.int32)
+    if quant:
+        kp = jnp.asarray(RNG.integers(-127, 128, (n_pages, page, hkv, d)), jnp.int8)
+        vp = jnp.asarray(RNG.integers(-127, 128, (n_pages, page, hkv, d)), jnp.int8)
+        ks = jnp.asarray(RNG.uniform(1e-3, 0.1, (n_pages, page, hkv)), jnp.float32)
+        vs = jnp.asarray(RNG.uniform(1e-3, 0.1, (n_pages, page, hkv)), jnp.float32)
+        return q, kp, vp, table, pos, ks, vs
+    kp = jnp.asarray(RNG.normal(0, 1, (n_pages, page, hkv, d)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(0, 1, (n_pages, page, hkv, d)), jnp.float32)
+    return q, kp, vp, table, pos, None, None
+
+
+@pytest.mark.parametrize(
+    "b,hkv,g,d,page,m,window,quant",
+    [
+        (2, 2, 4, 32, 8, 4, 0, False),     # GQA
+        (3, 1, 4, 32, 8, 5, 0, False),     # MQA, non-pow2 table width
+        (2, 4, 1, 32, 16, 3, 0, False),    # MHA
+        (2, 2, 2, 32, 8, 4, 12, False),    # sliding window
+        (2, 2, 4, 32, 8, 5, 0, True),      # int8 pages, fused dequant
+        (2, 2, 2, 32, 8, 4, 12, True),     # int8 + window
+    ],
+)
+def test_paged_attention_matches_ref(b, hkv, g, d, page, m, window, quant):
+    q, kp, vp, table, pos, ks, vs = _paged_case(b, hkv, g, d, page, m, 32, quant)
+    if quant:
+        out = ops.paged_attention_quant(q, kp, vp, ks, vs, table, pos, window=window)
+    else:
+        out = ops.paged_attention(q, kp, vp, table, pos, window=window)
+    expect = ref.paged_attention_ref(
+        q, kp, vp, table, pos, k_scale_pages=ks, v_scale_pages=vs, window=window
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_paged_scatter_bit_equal_to_at_set():
+    """The fused epilogue's aliased page write must be bit-identical to the
+    ``.at[page_idx, off].set()`` path — including every untouched page."""
+    n_pages, page, hkv, d, b = 12, 8, 2, 16, 4
+    kp = jnp.asarray(RNG.normal(0, 1, (n_pages, page, hkv, d)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(0, 1, (n_pages, page, hkv, d)), jnp.float32)
+    k_new = jnp.asarray(RNG.normal(0, 1, (b, hkv, d)), jnp.float32)
+    v_new = jnp.asarray(RNG.normal(0, 1, (b, hkv, d)), jnp.float32)
+    page_idx = jnp.asarray([3, 7, 1, 10], jnp.int32)
+    off = jnp.asarray([0, 5, 7, 2], jnp.int32)
+    got_k, got_v = ops.paged_scatter(kp, vp, k_new, v_new, page_idx, off)
+    np.testing.assert_array_equal(np.asarray(got_k),
+                                  np.asarray(kp.at[page_idx, off].set(k_new)))
+    np.testing.assert_array_equal(np.asarray(got_v),
+                                  np.asarray(vp.at[page_idx, off].set(v_new)))
+
+
+def test_paged_scatter_quant_bit_equal_to_at_set():
+    n_pages, page, hkv, d, b = 10, 8, 2, 16, 3
+    kp = jnp.asarray(RNG.integers(-127, 128, (n_pages, page, hkv, d)), jnp.int8)
+    vp = jnp.asarray(RNG.integers(-127, 128, (n_pages, page, hkv, d)), jnp.int8)
+    ks = jnp.asarray(RNG.uniform(0, 1, (n_pages, page, hkv)), jnp.float32)
+    vs = jnp.asarray(RNG.uniform(0, 1, (n_pages, page, hkv)), jnp.float32)
+    k_new = jnp.asarray(RNG.integers(-127, 128, (b, hkv, d)), jnp.int8)
+    v_new = jnp.asarray(RNG.integers(-127, 128, (b, hkv, d)), jnp.int8)
+    ks_new = jnp.asarray(RNG.uniform(0, 1, (b, hkv)), jnp.float32)
+    vs_new = jnp.asarray(RNG.uniform(0, 1, (b, hkv)), jnp.float32)
+    page_idx = jnp.asarray([2, 9, 5], jnp.int32)
+    off = jnp.asarray([7, 0, 3], jnp.int32)
+    got = ops.paged_scatter_quant(kp, vp, ks, vs, k_new, v_new, ks_new, vs_new,
+                                  page_idx, off)
+    want = (kp.at[page_idx, off].set(k_new), vp.at[page_idx, off].set(v_new),
+            ks.at[page_idx, off].set(ks_new), vs.at[page_idx, off].set(vs_new))
+    for g, w in zip(got, want):
+        assert g.dtype == w.dtype
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("quant,window", [(False, 0), (False, 12), (True, 0)])
+def test_paged_attention_scatter_fuses_bit_equal(quant, window):
+    """The fused single-dispatch step (scatter prologue + page walk) must
+    be bit-identical to standalone scatter followed by standalone
+    attention — outputs AND every page of the updated pools."""
+    b, hkv, g, d, page, m = 3, 2, 2, 32, 8, 4
+    n_pages = b * m + 2                  # distinct live pages per slot
+    q, kp, vp, table, pos, ks, vs = _paged_case(b, hkv, g, d, page, m, n_pages, quant)
+    page_idx = table[jnp.arange(b), pos // page]
+    off = pos % page
+    if quant:
+        k_new = jnp.asarray(RNG.integers(-127, 128, (b, hkv, d)), jnp.int8)
+        v_new = jnp.asarray(RNG.integers(-127, 128, (b, hkv, d)), jnp.int8)
+        ks_new = jnp.asarray(RNG.uniform(1e-3, 0.1, (b, hkv)), jnp.float32)
+        vs_new = jnp.asarray(RNG.uniform(1e-3, 0.1, (b, hkv)), jnp.float32)
+        want_pools = ops.paged_scatter_quant(
+            kp, vp, ks, vs, k_new, v_new, ks_new, vs_new, page_idx, off)
+        want_out = ops.paged_attention_quant(
+            q, *want_pools, table, pos, window=window)
+        got_out, got_pools = ops.paged_attention_scatter_quant(
+            q, k_new, v_new, ks_new, vs_new, kp, vp, ks, vs,
+            table, pos, page_idx, off, window=window)
+    else:
+        k_new = jnp.asarray(RNG.normal(0, 1, (b, hkv, d)), jnp.float32)
+        v_new = jnp.asarray(RNG.normal(0, 1, (b, hkv, d)), jnp.float32)
+        want_pools = ops.paged_scatter(kp, vp, k_new, v_new, page_idx, off)
+        want_out = ops.paged_attention(q, *want_pools, table, pos, window=window)
+        got_out, got_pools = ops.paged_attention_scatter(
+            q, k_new, v_new, kp, vp, table, pos, page_idx, off, window=window)
+    np.testing.assert_array_equal(np.asarray(got_out), np.asarray(want_out))
+    for got, want in zip(got_pools, want_pools):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_interpret_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert ops._interpret() is True
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert ops._interpret() is False
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+    # platform default: interpret everywhere except a real TPU backend
+    assert ops._interpret() is (jax.default_backend() != "tpu")

@@ -254,3 +254,85 @@ def test_poisson_arrivals_shape_and_bursts():
     assert a.shape == (8,) and a[0] == 0.0
     assert np.all(np.diff(a) >= 0)
     assert a[4] - a[3] >= 0.5                        # burst gap inserted
+
+
+# --------------------------------------------------------------------------
+# Pallas paged-decode kernel: parity matrix vs the dense oracle
+# --------------------------------------------------------------------------
+
+# Every case uses page=8 with a 12- or 16-token prompt and 8 decode steps,
+# so generation crosses a page boundary mid-decode (position 16 opens page
+# 2 while slots are live), and max_len=40 gives a non-power-of-two table
+# width (5 pages per request).
+#
+# The oracle is the dense-cache ServeEngine — except for MoE archs, where
+# prefill expert capacity scales with total batch tokens, so the dense
+# engine's batched prefill routes differently than the continuous
+# engine's per-request prefill (pre-existing batching semantics, not an
+# attention property).  MoE rows instead oracle against the XLA paged
+# engine: identical batching discipline, so any divergence localizes to
+# the kernel under test.
+PALLAS_MATRIX = [
+    # (arch, config overrides, prompt_len, max_len, oracle)
+    ("llama3.2-1b", {}, 12, 40, "dense"),                                  # GQA
+    ("llama3.2-1b", {"kv_quant": True}, 12, 40, "dense"),                  # int8
+    ("llama3.2-1b", {"attention": "swa", "window": 16}, 12, 40, "dense"),  # window
+    ("granite-moe-3b-a800m", {"kv_quant": True}, 12, 40, "xla"),           # MoE+int8
+    ("granite-moe-3b-a800m", {}, 12, 40, "xla"),                           # MoE
+    ("recurrentgemma-2b", {}, 16, 48, "dense"),                   # SSM-hybrid+local
+    ("internlm2-1.8b", {"kv_quant": True}, 12, 40, "dense"),               # GQA+int8
+]
+
+
+@pytest.mark.parametrize("arch,mods,prompt_len,max_len,oracle", PALLAS_MATRIX)
+def test_pallas_paged_decode_matches_oracle(rng_key, arch, mods,
+                                            prompt_len, max_len, oracle):
+    cfg = dataclasses.replace(reduced(get_config(arch)), **mods)
+    params = init_params(cfg, rng_key)
+    batch = make_batch(cfg, batch=2, seq_len=prompt_len, kind="prefill")
+    if oracle == "dense":
+        ref = np.asarray(
+            ServeEngine(cfg, params, max_len=64).generate(batch, n_steps=8)
+        )
+    else:
+        ref = np.asarray(
+            ContinuousEngine(cfg, params, n_slots=3, max_len=max_len, page=8)
+            .generate(batch, n_steps=8)
+        )
+    pal = ContinuousEngine(cfg, params, n_slots=3, max_len=max_len, page=8,
+                           attn_kernel="pallas")
+    np.testing.assert_array_equal(ref, np.asarray(pal.generate(batch, n_steps=8)))
+
+
+def test_pallas_xla_dense_three_way_parity(rng_key):
+    """One case asserting all three paths pairwise (the two paged engines
+    share pool geometry, so any divergence localizes to the kernel)."""
+    cfg = reduced(get_config("llama3.2-1b"))
+    params = init_params(cfg, rng_key)
+    batch = make_batch(cfg, batch=3, seq_len=14, kind="prefill")
+    dense = np.asarray(ServeEngine(cfg, params, max_len=64).generate(batch, n_steps=10))
+    xla = np.asarray(ContinuousEngine(cfg, params, n_slots=3, max_len=40, page=8)
+                     .generate(batch, n_steps=10))
+    pal = np.asarray(ContinuousEngine(cfg, params, n_slots=3, max_len=40, page=8,
+                                      attn_kernel="pallas").generate(batch, n_steps=10))
+    np.testing.assert_array_equal(dense, xla)
+    np.testing.assert_array_equal(dense, pal)
+
+
+def test_pallas_fused_sample_only_for_greedy(rng_key):
+    """temperature > 0 needs host-side logits: the fused (B,) token step is
+    reserved for greedy engines, and sampled output stays deterministic."""
+    cfg = reduced(get_config("llama3.2-1b"))
+    params = init_params(cfg, rng_key)
+    greedy = ContinuousEngine(cfg, params, n_slots=2, max_len=40, page=8,
+                              attn_kernel="pallas")
+    assert greedy._fused_sample
+    sampled = ContinuousEngine(cfg, params, n_slots=2, max_len=40, page=8,
+                               attn_kernel="pallas", temperature=1.0)
+    assert not sampled._fused_sample
+    batch = make_batch(cfg, batch=2, seq_len=12, kind="prefill")
+    s1 = np.asarray(sampled.generate(batch, n_steps=6, key=jax.random.PRNGKey(3)))
+    s2 = np.asarray(sampled.generate(batch, n_steps=6, key=jax.random.PRNGKey(3)))
+    np.testing.assert_array_equal(s1, s2)
+    with pytest.raises(ValueError, match="attn_kernel"):
+        ContinuousEngine(cfg, params, attn_kernel="mosaic")
